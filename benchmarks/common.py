@@ -1,0 +1,31 @@
+"""Benchmark helpers: JSON artifact cache + timing."""
+import json
+import os
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def cached(name: str, fn, force: bool = False):
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, name + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    out = fn()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=float)
+    return out
+
+
+def time_call(fn, *args, n: int = 10, warmup: int = 2) -> float:
+    """µs per call (after jit warmup, blocked on result)."""
+    import jax
+    for _ in range(warmup):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        r = fn(*args)
+    jax.block_until_ready(r)
+    return (time.perf_counter() - t0) / n * 1e6

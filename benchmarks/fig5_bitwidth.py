@@ -1,0 +1,43 @@
+"""Paper Fig 5: bit width of the encoded product vs (a) inference accuracy
+and (b) power/area of the 256×256 MAC array."""
+import jax
+import numpy as np
+
+from repro.core.layers import MacConfig
+from repro.core.mac import EncodedMac
+from repro.core.search import random_search, anneal
+from repro.hw import mac_array_cost
+from repro.data.synthetic import synthetic_images
+from repro.apps.image_cls import (train_cnn, accuracy, calibrate,
+                                  convert_params)
+
+
+def run():
+    imgs, labels = synthetic_images(6000, seed=0)
+    ti, tl = imgs[:5000], labels[:5000]
+    vi, vl = imgs[5000:], labels[5000:]
+    fp = MacConfig(mode="fp")
+    params = train_cnn(jax.random.PRNGKey(0), ti, tl, fp, epochs=8)
+    acc_fp = accuracy(params, vi, vl, fp)
+
+    widths = [16, 24, 32, 48, 64]
+    out = {}
+    for w in widths:
+        res = random_search(seed=10 + w, m_bits=w, n_samples=256, batch=64)
+        res = anneal(res.spec, seed=20 + w, iters=1536, batch=64)
+        mac = EncodedMac.from_spec(res.spec)
+        mcfg = MacConfig(mode="encoded", mac=mac)
+        p = calibrate(convert_params(params, mcfg), ti, mcfg)
+        acc = accuracy(p, vi, vl, mcfg)
+        hw = mac_array_cost(256, m_bits=w, design="prop")
+        out[str(w)] = {"rmse": float(res.spec.rmse), "acc": acc,
+                       "power_w": hw["power_w"], "area_mm2": hw["area_mm2"]}
+    return {"fp32_acc": acc_fp, "per_width": out}
+
+
+def csv_lines(res):
+    lines = [f"fig5_fp32_acc,0,{res['fp32_acc']:.4f}"]
+    for w, r in res["per_width"].items():
+        lines.append(f"fig5_acc_width{w},0,{r['acc']:.4f}")
+        lines.append(f"fig5_power_width{w},0,{r['power_w']:.3f}")
+    return lines

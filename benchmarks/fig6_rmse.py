@@ -1,0 +1,45 @@
+"""Paper Fig 6: (a) RMSE vs bit width under the binary search; (b) RMSE vs
+number of samples at M=48.  Also records the beyond-paper annealing curve."""
+import numpy as np
+
+from repro.core.search import random_search, anneal, binary_search_width
+
+
+def run():
+    # (b) RMSE vs samples at the paper's width (8×8 operands)
+    res = random_search(seed=0, m_bits=48, n_samples=10_000, batch=64,
+                        rel_tol=0.0, patience=10 ** 9)
+    trace = res.rmse_trace
+    marks = [10, 30, 100, 300, 1000, 3000, 10_000]
+    curve = {str(m): float(trace[min(m, len(trace)) - 1]) for m in marks}
+
+    ann = anneal(res.spec, seed=1, iters=3000, batch=64)
+
+    # (a) best RMSE per width (reduced sample budget per width)
+    widths = [16, 24, 32, 48, 64, 96, 128]
+    per_width = {}
+    for w in widths:
+        r = random_search(seed=2, m_bits=w, n_samples=768, batch=64,
+                          rel_tol=0.0, patience=10 ** 9)
+        per_width[str(w)] = float(r.spec.rmse)
+
+    # binary search against a target met near 48 bits
+    target = per_width["48"] * 1.05
+    spec, hist = binary_search_width(seed=3, target_rmse=target,
+                                     lo=16, hi=128, n_samples=512)
+    return {"rmse_vs_samples": curve,
+            "rmse_random_10k": float(res.spec.rmse),
+            "rmse_anneal_3k": float(ann.spec.rmse),
+            "rmse_vs_width": per_width,
+            "binary_search": {"found_width": spec.m_bits,
+                              "target": float(target),
+                              "history": hist}}
+
+
+def csv_lines(res):
+    lines = [f"fig6_rmse_random10k,0,{res['rmse_random_10k']:.2f}",
+             f"fig6_rmse_anneal3k,0,{res['rmse_anneal_3k']:.2f}",
+             f"fig6_binary_search_width,0,{res['binary_search']['found_width']}"]
+    for w, v in res["rmse_vs_width"].items():
+        lines.append(f"fig6_rmse_width{w},0,{v:.2f}")
+    return lines

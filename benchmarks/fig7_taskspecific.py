@@ -1,0 +1,68 @@
+"""Paper Fig 7: task-specific encoded arrays for 4-bit non-uniform
+quantization — the multiplier truth table is the 16×16 table of non-uniform
+LEVEL PRODUCTS, searched directly (no conversion to int8); the found width
+is much smaller than the general-purpose 48 bits (paper: ~31)."""
+import numpy as np
+import jax
+
+from repro.core import gates as G
+from repro.core.search import binary_search_width, random_search
+from repro.quant.nonuniform import kmeans_levels
+from repro.hw import mac_array_cost
+from repro.data.synthetic import synthetic_images
+from repro.apps.image_cls import train_cnn, accuracy
+from repro.core.layers import MacConfig
+
+
+def run():
+    # non-uniform levels from a trained net's weight distribution
+    imgs, labels = synthetic_images(2000, seed=0)
+    params = train_cnn(jax.random.PRNGKey(0), imgs[:1500], labels[:1500],
+                       MacConfig(mode="fp"), epochs=3)
+    w_all = np.concatenate([np.asarray(v["w"]).ravel()
+                            for v in params.values()])
+    levels = np.asarray(kmeans_levels(w_all, bits=4))
+    scale = np.abs(levels).max()
+    lv = levels / scale
+    acts = np.linspace(0, 1, 16)             # 4-bit uniform activations
+    values = G.level_products(acts, lv)
+
+    # general-purpose reference: the paper compares like-for-like RANDOM
+    # searches — the 48-bit random-search encoding's RELATIVE RMSE sets the
+    # accuracy-preserving target for the task-specific search.  (Using the
+    # beyond-paper annealed encoding as the bar instead demands rel-RMSE
+    # ≈1.6% and the 4-bit non-uniform level-product table then needs ≥64
+    # bits — reported in EXPERIMENTS.md.)
+    from repro.core.mac import EncodedMac
+    try:
+        ref = EncodedMac.load("enc48_8x8_random")
+    except FileNotFoundError:
+        ref = EncodedMac.default()
+    target_rel = ref.spec.rmse / np.sqrt(np.mean(
+        G.signed_products(8, 8) ** 2))
+    target = float(target_rel * np.sqrt(np.mean(values ** 2)))
+
+    spec, hist = binary_search_width(
+        seed=1, target_rmse=target, lo=8, hi=64, n_samples=512,
+        bits_a=4, bits_b=4, values=values, refine=256)
+    hw_gen = mac_array_cost(256, 48, "prop")
+    hw_task = mac_array_cost(256, spec.m_bits, "prop")
+    return {
+        "task_specific_width": spec.m_bits,
+        "general_width": 48,
+        "target_rmse": target,
+        "found_rmse": float(spec.rmse),
+        "power_general_w": hw_gen["power_w"],
+        "power_task_w": hw_task["power_w"],
+        "area_general_mm2": hw_gen["area_mm2"],
+        "area_task_mm2": hw_task["area_mm2"],
+        "history": hist,
+    }
+
+
+def csv_lines(res):
+    return [
+        f"fig7_task_width,0,{res['task_specific_width']}",
+        f"fig7_power_task_w,0,{res['power_task_w']:.3f}",
+        f"fig7_area_task_mm2,0,{res['area_task_mm2']:.3f}",
+    ]

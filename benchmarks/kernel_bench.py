@@ -1,0 +1,47 @@
+"""Encoded-matmul micro-bench (CPU wall time is NOT the perf claim — TPU is
+the target; this records the simulation cost + the decomposition's plane
+count R, which sets the TPU FLOP multiplier of the functional simulation)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.mac import EncodedMac, lut_matmul
+from repro.kernels.ops import encoded_matmul
+from repro.kernels.ref import encoded_matmul_ref
+from .common import time_call
+
+
+def run():
+    mac = EncodedMac.default()
+    prog = mac.program
+    rng = np.random.default_rng(0)
+    m = k = n = 256
+    x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    s = jnp.asarray(mac.s_init)
+    Wt, bias = prog.fold_weights(wq, s)
+
+    f_x = jax.jit(lambda a: encoded_matmul(a, Wt, bias, prog.a_mono_bits,
+                                           backend="xla"))
+    f_ref = jax.jit(lambda a: encoded_matmul_ref(a, Wt, bias,
+                                                 prog.a_mono_bits))
+    f_lut = jax.jit(lambda a: lut_matmul(a, wq, mac.spec.lut()))
+    f_fp = jax.jit(lambda a: a.astype(jnp.float32)
+                   @ wq.astype(jnp.float32))
+    return {
+        "planes_R": int(prog.n_a_planes),
+        "b_planes_V": int(prog.n_b_planes),
+        "m_bits": int(mac.spec.m_bits),
+        "encoded_xla_us": time_call(f_x, x, n=5),
+        "encoded_ref_us": time_call(f_ref, x, n=5),
+        "lut_oracle_us": time_call(f_lut, x, n=3),
+        "fp_matmul_us": time_call(f_fp, x, n=10),
+    }
+
+
+def csv_lines(res):
+    return [
+        f"kernel_encoded_xla,{res['encoded_xla_us']:.1f},R={res['planes_R']}",
+        f"kernel_lut_oracle,{res['lut_oracle_us']:.1f},",
+        f"kernel_fp_matmul,{res['fp_matmul_us']:.1f},",
+    ]

@@ -1,0 +1,43 @@
+"""Aggregate dry-run artifacts → roofline table (EXPERIMENTS.md §Roofline)."""
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if "__" in os.path.basename(path) and d.get("tag"):
+            continue                      # perf-iteration variants excluded
+        row = {"arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+               "status": d["status"]}
+        if d["status"] == "ok":
+            r = d["roofline"]
+            row.update(
+                t_compute=r["t_compute_s"], t_memory=r["t_memory_s"],
+                t_collective=r["t_collective_s"], dominant=r["dominant"],
+                useful_flops_ratio=r["useful_flops_ratio"],
+                roofline_fraction=r["roofline_fraction"],
+                temp_gb=d["memory"]["temp_bytes"] / 1e9,
+                args_gb=d["memory"]["argument_bytes"] / 1e9,
+                compile_s=d.get("compile_s"))
+        elif d["status"] == "skip":
+            row["reason"] = d.get("reason", "")[:60]
+        else:
+            row["error"] = d.get("error", "")[:80]
+        rows.append(row)
+    return {"rows": rows}
+
+
+def csv_lines(res):
+    lines = []
+    for r in res["rows"]:
+        if r["status"] == "ok" and r["mesh"] == "single":
+            lines.append(
+                f"roofline_{r['arch']}_{r['shape']},0,"
+                f"dom={r['dominant']}:frac={r['roofline_fraction']:.3f}")
+    return lines

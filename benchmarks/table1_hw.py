@@ -1,0 +1,33 @@
+"""Paper Table 1: power/area of proposed vs traditional MAC arrays
+(calibrated analytical gate model — see hw/costmodel.py) + beyond-paper
+scaling to 512/1024 arrays."""
+from repro.hw import table1
+
+
+def run():
+    rows = table1(m_bits=48, sizes=[32, 48, 64, 128, 256, 512, 1024])
+    out = []
+    for r in rows:
+        rec = {"N": r["N"],
+               "power_red_model": round(r["power_red"], 4),
+               "area_red_model": round(r["area_red"], 4),
+               "power_prop_w": round(r["power_prop_w"], 3),
+               "area_prop_mm2": round(r["area_prop_mm2"], 3)}
+        if "paper_power_red" in r:
+            rec["power_red_paper"] = round(r["paper_power_red"], 4)
+            rec["area_red_paper"] = round(r["paper_area_red"], 4)
+            rec["power_delta_pp"] = round(
+                100 * (r["power_red"] - r["paper_power_red"]), 2)
+            rec["area_delta_pp"] = round(
+                100 * (r["area_red"] - r["paper_area_red"]), 2)
+        out.append(rec)
+    return {"rows": out}
+
+
+def csv_lines(res):
+    lines = []
+    for r in res["rows"]:
+        lines.append(f"table1_area_red_N{r['N']},0,{r['area_red_model']:.4f}")
+        lines.append(
+            f"table1_power_red_N{r['N']},0,{r['power_red_model']:.4f}")
+    return lines

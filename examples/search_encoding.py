@@ -1,0 +1,50 @@
+"""Reproduce the paper's encoding search at full scale (8×8 operands):
+
+  random sampling (§3.1, Fig 6b) → binary width search (Fig 6a) → anneal
+  refinement (beyond paper) → save as the framework's default artifact.
+
+  PYTHONPATH=src python examples/search_encoding.py --samples 2000
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import random_search, anneal, binary_search_width
+from repro.core.mac import EncodedMac
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--samples", type=int, default=2000)
+    ap.add_argument("--width", type=int, default=48)
+    ap.add_argument("--anneal", type=int, default=2000)
+    ap.add_argument("--binary-search", action="store_true")
+    ap.add_argument("--save-as", default=None)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    res = random_search(seed=0, m_bits=args.width, n_samples=args.samples,
+                        batch=64)
+    print(f"[{time.time()-t0:6.1f}s] random search M={args.width}: "
+          f"RMSE {res.spec.rmse:.2f} ({res.n_samples} samples)")
+
+    ref = anneal(res.spec, seed=1, iters=args.anneal, batch=64)
+    print(f"[{time.time()-t0:6.1f}s] anneal: RMSE {ref.spec.rmse:.2f} "
+          f"({res.spec.rmse / ref.spec.rmse:.1f}x better)")
+
+    if args.binary_search:
+        spec, hist = binary_search_width(seed=2, target_rmse=ref.spec.rmse
+                                         * 1.5, n_samples=args.samples // 4)
+        for h in hist:
+            print(f"  width {h['width']:4d}: RMSE {h['rmse']:10.2f} "
+                  f"{'<= target' if h['meets_target'] else '> target'}")
+        print(f"[{time.time()-t0:6.1f}s] minimal width: {spec.m_bits}")
+
+    if args.save_as:
+        path = EncodedMac.save(ref.spec, args.save_as)
+        print("saved:", path)
+
+
+if __name__ == "__main__":
+    main()

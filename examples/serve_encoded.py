@@ -1,0 +1,18 @@
+"""Serve a small LM with batched requests under the encoded-MAC inference
+mode — the systems integration of the paper's accelerator (every linear
+layer computes through the encoding simulation).
+
+  PYTHONPATH=src python examples/serve_encoded.py
+"""
+import subprocess
+import sys
+import os
+
+env = dict(os.environ)
+env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+for mode in ("fp", "encoded"):
+    print(f"--- mac-mode={mode} ---")
+    subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                    "--arch", "qwen1.5-0.5b", "--reduced",
+                    "--mac-mode", mode, "--requests", "6",
+                    "--max-new", "8"], env=env, check=True)

@@ -1,0 +1,89 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+  PYTHONPATH=src python scripts/render_experiments.py > /tmp/tables.md
+"""
+import glob
+import json
+import os
+
+ART = "benchmarks/artifacts/dryrun"
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def fmt_t(t):
+    if t >= 1:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t*1e3:.1f}ms"
+    return f"{t*1e6:.0f}µs"
+
+
+def load():
+    rows = {}
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        base = os.path.basename(p)[:-5]
+        parts = base.split("__")
+        if len(parts) > 3:
+            continue                      # tagged perf variants
+        with open(p) as f:
+            rows[tuple(parts)] = json.load(f)
+    return rows
+
+
+ARCH_ORDER = ["qwen1.5-0.5b", "qwen1.5-4b", "gemma2-27b", "starcoder2-3b",
+              "qwen3-moe-235b-a22b", "deepseek-v3-671b", "xlstm-1.3b",
+              "hymba-1.5b", "whisper-large-v3", "phi-3-vision-4.2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    rows = load()
+    print("### §Dry-run — all 40 cells × {16×16 single-pod, 2×16×16 "
+          "multi-pod}\n")
+    print("| arch | shape | mesh | status | args GiB/dev | temp GiB/dev | "
+          "coll GiB/dev (raw HLO) | compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("single", "multi"):
+                d = rows.get((a, s, m))
+                if d is None:
+                    print(f"| {a} | {s} | {m} | MISSING | | | | |")
+                    continue
+                if d["status"] == "skip":
+                    print(f"| {a} | {s} | {m} | skip — "
+                          f"{d['reason'][:58]} | | | | |")
+                elif d["status"] == "error":
+                    print(f"| {a} | {s} | {m} | ERROR {d['error'][:40]} "
+                          f"| | | | |")
+                else:
+                    mem = d["memory"]
+                    coll = d["raw"]["collectives"].get("_total", 0)
+                    print(f"| {a} | {s} | {m} | ok | "
+                          f"{fmt_bytes(mem['argument_bytes'])} | "
+                          f"{fmt_bytes(mem['temp_bytes'])} | "
+                          f"{coll/2**30:.2f} | {d['compile_s']} |")
+    print()
+    print("### §Roofline — single-pod 16×16, scan-probe-corrected terms\n")
+    print("| arch | shape | t_comp | t_mem | t_coll | dominant | "
+          "MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = rows.get((a, s, "single"))
+            if d is None or d["status"] != "ok":
+                continue
+            r = d["roofline"]
+            print(f"| {a} | {s} | {fmt_t(r['t_compute_s'])} | "
+                  f"{fmt_t(r['t_memory_s'])} | {fmt_t(r['t_collective_s'])} "
+                  f"| **{r['dominant']}** | {r['useful_flops_ratio']:.2f} | "
+                  f"{r['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

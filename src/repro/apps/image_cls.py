@@ -1,0 +1,158 @@
+"""Small conv-net image classifier — the Table-2 accuracy-mechanism vehicle.
+
+ResNet-style (2 conv blocks + residual + dense head), trained fp32 on the
+synthetic shape dataset, then evaluated under:
+  fp32 → int8-uniform (paper "Orig.") → encoded MAC ("Prop.")
+  → fine-tuned position weights → 4-bit non-uniform variants.
+All linear/conv layers route through core.layers (same MAC modes as the LM
+stack)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import (MacConfig, dense_init, dense_apply, conv_init,
+                               conv_apply, calibrate_dense)
+from repro.optim import make_optimizer
+from repro.quant.uniform import calibrate_scale
+from repro.quant.nonuniform import kmeans_levels, nonuniform_codes
+
+
+def cnn_init(key, n_classes: int = 10, width: int = 16,
+             mcfg: MacConfig = MacConfig()) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "c1": conv_init(ks[0], 3, 3, 3, width, mcfg),
+        "c2": conv_init(ks[1], 3, 3, width, width, mcfg),
+        "c3": conv_init(ks[2], 3, 3, width, 2 * width, mcfg),
+        "d1": dense_init(ks[3], 2 * width * 16, 64, mcfg),
+        "d2": dense_init(ks[4], 64, n_classes, mcfg),
+    }
+
+
+def cnn_apply(p, x, mcfg: MacConfig):
+    h = jax.nn.relu(conv_apply(p["c1"], x, mcfg, 3, 3))
+    h = jax.nn.relu(conv_apply(p["c2"], h, mcfg, 3, 3, stride=2) )
+    h2 = jax.nn.relu(conv_apply(p["c3"], h, mcfg, 3, 3, stride=2))
+    n = x.shape[0]
+    h2 = h2.reshape(n, -1)
+    h3 = jax.nn.relu(dense_apply(p["d1"], h2, mcfg))
+    return dense_apply(p["d2"], h3, mcfg)
+
+
+def train_cnn(key, imgs, labels, mcfg=MacConfig(), epochs: int = 8,
+              lr: float = 3e-3, batch: int = 64):
+    params = cnn_init(key, mcfg=mcfg)
+    opt = make_optimizer("adamw")
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, xb, yb):
+        def loss_fn(p):
+            logits = cnn_apply(p, xb, mcfg)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(lp, yb[:, None], 1).mean()
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(g, state, params, lr)
+        return params, state, loss
+
+    n = imgs.shape[0]
+    rng = np.random.default_rng(0)
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i:i + batch]
+            params, state, loss = step(params, state, jnp.asarray(imgs[idx]),
+                                       jnp.asarray(labels[idx]))
+    return params
+
+
+def accuracy(params, imgs, labels, mcfg, batch: int = 256) -> float:
+    hits = 0
+    fwd = jax.jit(lambda p, x: jnp.argmax(cnn_apply(p, x, mcfg), -1))
+    for i in range(0, imgs.shape[0], batch):
+        pred = fwd(params, jnp.asarray(imgs[i:i + batch]))
+        hits += int((np.asarray(pred) == labels[i:i + batch]).sum())
+    return hits / imgs.shape[0]
+
+
+def calibrate(params, imgs, mcfg, n: int = 256):
+    """Set activation-scale buffers from a calibration batch (layer order)."""
+    x = jnp.asarray(imgs[:n])
+    p = dict(params)
+    p["c1"] = _cal_conv(p["c1"], x, mcfg, 3, 3)
+    h = jax.nn.relu(conv_apply(p["c1"], x, mcfg, 3, 3))
+    p["c2"] = _cal_conv(p["c2"], h, mcfg, 3, 3)
+    h = jax.nn.relu(conv_apply(p["c2"], h, mcfg, 3, 3, stride=2))
+    p["c3"] = _cal_conv(p["c3"], h, mcfg, 3, 3)
+    h2 = jax.nn.relu(conv_apply(p["c3"], h, mcfg, 3, 3, stride=2))
+    h2 = h2.reshape(x.shape[0], -1)
+    p["d1"] = calibrate_dense(p["d1"], h2, mcfg)
+    h3 = jax.nn.relu(dense_apply(p["d1"], h2, mcfg))
+    p["d2"] = calibrate_dense(p["d2"], h3, mcfg)
+    return p
+
+
+def _cal_conv(pc, x, mcfg, kh, kw):
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return calibrate_dense(pc, patches, mcfg)
+
+
+def convert_params(params_fp, mcfg_to: MacConfig):
+    """fp params → params for an int8/encoded MacConfig (adds s + scales)."""
+    out = {}
+    for name, p in params_fp.items():
+        q = {"w": p["w"]}
+        if mcfg_to.mode == "encoded" and mcfg_to.per_layer_s:
+            q["s"] = jnp.asarray(mcfg_to.mac.s_init, jnp.float32)
+        if mcfg_to.mode in ("int8", "encoded"):
+            q["a_scale"] = p.get("a_scale", jnp.ones((), jnp.float32))
+        out[name] = q
+    return out
+
+
+def finetune_s(params, imgs, labels, mcfg, steps: int = 150, lr: float = 1e-3,
+               batch: int = 64):
+    """Paper §3.3: fine-tune ONLY the position weights with STE grads."""
+    opt = make_optimizer("sgd")
+    s_tree = {k: v["s"] for k, v in params.items() if "s" in v}
+    state = opt.init(s_tree)
+
+    @jax.jit
+    def step(s_tree, state, xb, yb):
+        def loss_fn(st):
+            p = {k: dict(v, s=st[k]) if k in st else v
+                 for k, v in params.items()}
+            logits = cnn_apply(p, xb, mcfg)
+            lp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(lp, yb[:, None], 1).mean()
+        loss, g = jax.value_and_grad(loss_fn)(s_tree)
+        s_tree, state = opt.update(g, state, s_tree, lr)
+        return s_tree, state, loss
+
+    rng = np.random.default_rng(1)
+    n = imgs.shape[0]
+    for i in range(steps):
+        idx = rng.integers(0, n, batch)
+        s_tree, state, loss = step(s_tree, state, jnp.asarray(imgs[idx]),
+                                   jnp.asarray(labels[idx]))
+    return {k: dict(v, s=s_tree[k]) if k in s_tree else v
+            for k, v in params.items()}
+
+
+def nonuniform_to_int8_params(params, bits: int = 4):
+    """Paper's non-uniform setting: per-layer 4-bit k-means levels snapped to
+    the nearest int8 codes (executed on the general-purpose encoded array)."""
+    out = {}
+    for name, p in params.items():
+        w = p["w"]
+        levels = kmeans_levels(w, bits=bits)
+        codes = nonuniform_codes(w, levels)
+        wq = levels[codes]
+        out[name] = dict(p, w=wq)
+    return out

@@ -1,0 +1,2 @@
+from .checkpoint import save_checkpoint, restore_checkpoint, \
+    async_save_checkpoint, latest_step

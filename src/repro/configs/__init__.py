@@ -1,0 +1,2 @@
+from .base import ModelConfig, SHAPES, ShapeSpec
+from .registry import get_config, list_archs

@@ -1,0 +1,12 @@
+"""Core of the paper's contribution: encoding-based MAC design in JAX.
+
+Pipeline: sample circuits (circuits) → fit position weights (encoding) →
+search widths (search) → decompose to TPU bitplane GEMMs (decompose) →
+integrate as NN layers with STE fine-tuning (mac, layers).
+"""
+from .circuits import Circuit, sample_circuits, paper_fig2_circuit
+from .encoding import EncodingSpec, fit_circuit, fit_position_weights, rmse_of
+from .search import random_search, anneal, binary_search_width
+from .decompose import BitplaneProgram, decompose
+from .mac import EncodedMac, lut_matmul, encoded_matmul_qat
+from .layers import MacConfig, dense_init, dense_apply, conv_init, conv_apply

@@ -1,0 +1,109 @@
+"""Circuit specification + random sampling (EncodingNet §3.1).
+
+A circuit is M single-level gates; gate j drives output bit j.  Circuits are
+plain numpy (static metadata); evaluation happens in JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+import numpy as np
+
+from . import gates as G
+
+
+@dataclasses.dataclass
+class Circuit:
+    """Static description of an encoding-based multiplier circuit."""
+    gate_types: np.ndarray          # (M,) int32
+    in_idx: np.ndarray              # (M, 3) int32 — operand-bit inputs
+    bits_a: int = 8
+    bits_b: int = 8
+
+    @property
+    def m_bits(self) -> int:
+        return int(self.gate_types.shape[0])
+
+    @property
+    def n_inputs(self) -> int:
+        return self.bits_a + self.bits_b
+
+    def validate(self) -> None:
+        assert self.gate_types.shape == (self.m_bits,)
+        assert self.in_idx.shape == (self.m_bits, 3)
+        assert self.gate_types.min() >= 0 and self.gate_types.max() < G.N_GATE_TYPES
+        assert self.in_idx.min() >= 0 and self.in_idx.max() < self.n_inputs
+
+    # --- hardware cost (gate equivalents), used by hw.costmodel -------------
+    def gate_equivalents(self) -> float:
+        return float(G.GATE_AREA_GE[self.gate_types].sum())
+
+    # --- (de)serialization ---------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "gate_types": self.gate_types.tolist(),
+            "in_idx": self.in_idx.tolist(),
+            "bits_a": self.bits_a,
+            "bits_b": self.bits_b,
+        })
+
+    @staticmethod
+    def from_json(s: str) -> "Circuit":
+        d = json.loads(s)
+        return Circuit(np.asarray(d["gate_types"], np.int32),
+                       np.asarray(d["in_idx"], np.int32),
+                       d["bits_a"], d["bits_b"])
+
+
+def sample_circuits(rng: np.random.Generator, n: int, m_bits: int,
+                    bits_a: int = 8, bits_b: int = 8,
+                    mixed_only: bool = False) -> tuple[np.ndarray, np.ndarray]:
+    """Sample ``n`` random circuits (batched arrays, not Circuit objects).
+
+    Returns (gate_types (n, M), in_idx (n, M, 3)).
+
+    ``mixed_only``: bias sampling so multi-input gates draw at least one input
+    from each operand (pure single-operand gates carry no product
+    information); the paper samples uniformly — keep False for fidelity.
+    """
+    n_in = bits_a + bits_b
+    gate_types = rng.integers(0, G.N_GATE_TYPES, size=(n, m_bits), dtype=np.int32)
+    in_idx = rng.integers(0, n_in, size=(n, m_bits, 3), dtype=np.int32)
+    if mixed_only:
+        arity = G.GATE_ARITY[gate_types]          # (n, M)
+        multi = arity >= 2
+        # force input 0 from A, input 1 from B for multi-input gates
+        a_pick = rng.integers(0, bits_a, size=(n, m_bits), dtype=np.int32)
+        b_pick = rng.integers(0, bits_b, size=(n, m_bits), dtype=np.int32) + bits_a
+        in_idx[:, :, 0] = np.where(multi, a_pick, in_idx[:, :, 0])
+        in_idx[:, :, 1] = np.where(multi, b_pick, in_idx[:, :, 1])
+    return gate_types, in_idx
+
+
+def circuit_from_batch(gate_types: np.ndarray, in_idx: np.ndarray, i: int,
+                       bits_a: int = 8, bits_b: int = 8) -> Circuit:
+    return Circuit(np.asarray(gate_types[i], np.int32),
+                   np.asarray(in_idx[i], np.int32), bits_a, bits_b)
+
+
+def paper_fig2_circuit() -> tuple[Circuit, np.ndarray]:
+    """The 2-bit example of Fig. 2(c): a hand-built 5-bit encoding.
+
+    Returns (circuit, position_weights) approximating a 2-bit signed
+    multiplier.  Used as a didactic fixture in tests/docs — the exact paper
+    wiring is not published, so this is *a* valid 5-wide single-level circuit
+    for the 2-bit case (found by a short search, frozen here).
+    """
+    # inputs: 0=a0, 1=a1(sign), 2=b0, 3=b1(sign)
+    gate_types = np.array([G.AND2, G.AND2, G.AND2, G.AND2, G.XOR3], np.int32)
+    in_idx = np.array([
+        [0, 2, 0],   # a0 & b0
+        [0, 3, 0],   # a0 & b1
+        [1, 2, 0],   # a1 & b0
+        [1, 3, 0],   # a1 & b1
+        [1, 3, 1],   # a1 ^ b1 ^ a1 = b1 (wire; keeps 5 bits for the demo)
+    ], np.int32)
+    s = np.array([1.0, -2.0, -2.0, 4.0, 0.0], np.float32)
+    return Circuit(gate_types, in_idx, 2, 2), s

@@ -1,0 +1,119 @@
+"""Encoding evaluation: truth-table B matrix, least-squares position weights,
+RMSE (EncodingNet Eq. (1)).
+
+The position-weight fit  s* = argmin ‖B s − v‖₂  is solved with ridge-damped
+normal equations (duplicate gate outputs make B rank-deficient); the damping
+(1e-6 relative) changes RMSE by <1e-6 and keeps the solve vmappable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import gates as G
+from .circuits import Circuit
+
+
+@dataclasses.dataclass
+class EncodingSpec:
+    """A searched encoding: circuit + fitted position weights + fit quality."""
+    circuit: Circuit
+    s: np.ndarray                   # (M,) float32 position weights
+    rmse: float
+    values: Optional[np.ndarray] = None   # target products (T,) if non-standard
+
+    @property
+    def m_bits(self) -> int:
+        return self.circuit.m_bits
+
+    def lut(self, s: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """(2^bits_a, 2^bits_b) approximate-product table, row a-code-major."""
+        s = self.s if s is None else s
+        B = truth_table_bits(self.circuit)
+        tbl = B.astype(jnp.float32) @ jnp.asarray(s, jnp.float32)
+        return tbl.reshape(1 << self.circuit.bits_a, 1 << self.circuit.bits_b)
+
+
+def truth_table_bits(circuit: Circuit) -> jnp.ndarray:
+    """Full truth table of the circuit: (T, M) bits, T = 2^(bits_a+bits_b)."""
+    rows = jnp.asarray(G.operand_bit_table(circuit.bits_a, circuit.bits_b))
+    return G.eval_gates(jnp.asarray(circuit.gate_types),
+                        jnp.asarray(circuit.in_idx), rows)
+
+
+@functools.partial(jax.jit, static_argnames=("bits_a", "bits_b", "chunk"))
+def _fit_batch(gate_types: jnp.ndarray, in_idx: jnp.ndarray,
+               values: jnp.ndarray, bits_a: int, bits_b: int,
+               chunk: int = 8192):
+    """Fit position weights for a batch of circuits.
+
+    Args:
+      gate_types: (C, M), in_idx: (C, M, 3), values: (T,) float32.
+    Returns:
+      s: (C, M) float32, rmse: (C,) float32.
+    """
+    rows_np = G.operand_bit_table(bits_a, bits_b)
+    T = rows_np.shape[0]
+    M = gate_types.shape[1]
+    n_chunks = max(1, T // chunk)
+    rows = jnp.asarray(rows_np).reshape(n_chunks, -1, bits_a + bits_b)
+    vals = values.reshape(n_chunks, -1)
+
+    def per_circuit(gt, ii):
+        def body(carry, xs):
+            Gm, c, vv = carry
+            r, v = xs
+            B = G.eval_gates(gt, ii, r).astype(jnp.float32)   # (t, M)
+            Gm = Gm + B.T @ B
+            c = c + B.T @ v
+            vv = vv + jnp.sum(v * v)
+            return (Gm, c, vv), None
+
+        init = (jnp.zeros((M, M), jnp.float32), jnp.zeros((M,), jnp.float32),
+                jnp.zeros((), jnp.float32))
+        (Gm, c, vv), _ = jax.lax.scan(body, init, (rows, vals))
+        lam = 1e-6 * (jnp.trace(Gm) / M + 1.0)
+        s = jnp.linalg.solve(Gm + lam * jnp.eye(M, dtype=jnp.float32), c)
+        # ‖Bs−v‖² = sᵀGs − 2sᵀc + ‖v‖²  (no need to re-stream B)
+        sse = jnp.maximum(s @ Gm @ s - 2.0 * s @ c + vv, 0.0)
+        return s, jnp.sqrt(sse / T)
+
+    return jax.vmap(per_circuit)(gate_types, in_idx)
+
+
+def fit_position_weights(gate_types: np.ndarray, in_idx: np.ndarray,
+                         values: np.ndarray, bits_a: int = 8, bits_b: int = 8
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Batched least-squares fit — returns (s (C, M), rmse (C,)) as numpy."""
+    T = 1 << (bits_a + bits_b)
+    chunk = min(8192, T)
+    s, rmse = _fit_batch(jnp.asarray(gate_types), jnp.asarray(in_idx),
+                         jnp.asarray(values, jnp.float32), bits_a, bits_b,
+                         chunk=chunk)
+    return np.asarray(s), np.asarray(rmse)
+
+
+def fit_circuit(circuit: Circuit, values: Optional[np.ndarray] = None
+                ) -> EncodingSpec:
+    """Fit a single circuit (convenience wrapper)."""
+    if values is None:
+        values = G.signed_products(circuit.bits_a, circuit.bits_b)
+    s, rmse = fit_position_weights(circuit.gate_types[None], circuit.in_idx[None],
+                                   values, circuit.bits_a, circuit.bits_b)
+    return EncodingSpec(circuit, s[0], float(rmse[0]),
+                        values=np.asarray(values, np.float32))
+
+
+def rmse_of(circuit: Circuit, s: np.ndarray,
+            values: Optional[np.ndarray] = None) -> float:
+    """Direct RMSE evaluation (independent of the normal-equation path)."""
+    if values is None:
+        values = G.signed_products(circuit.bits_a, circuit.bits_b)
+    B = np.asarray(truth_table_bits(circuit), np.float32)
+    err = B @ np.asarray(s, np.float32) - np.asarray(values, np.float32)
+    return float(np.sqrt(np.mean(err ** 2)))

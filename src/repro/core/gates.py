@@ -1,0 +1,99 @@
+"""Single-level gate library for encoding-based multipliers (EncodingNet §3.1).
+
+A multiplier output bit is driven by ONE gate whose inputs are chosen from the
+operand bits.  Operand bits are indexed ``0..bits_a-1`` (LSB..MSB of operand A,
+two's complement) followed by ``bits_a..bits_a+bits_b-1`` (operand B).
+
+Gate library (paper §3.1): SET, IN, NOT, AND2, OR2, NAND2, NAND3, XOR3.
+``SET`` outputs constant 1 (constant bias term); ``IN`` wires an operand bit
+straight through.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Gate type ids (stable — serialized in circuit artifacts).
+SET, IN, NOT, AND2, OR2, NAND2, NAND3, XOR3 = range(8)
+
+GATE_NAMES = ["SET", "IN", "NOT", "AND2", "OR2", "NAND2", "NAND3", "XOR3"]
+N_GATE_TYPES = 8
+
+# Number of distinct operand-bit inputs each gate consumes.
+GATE_ARITY = np.array([0, 1, 1, 2, 2, 2, 3, 3], dtype=np.int32)
+
+# Gate-equivalent area/power proxies (relative to NAND2 == 1.0) used by the
+# analytical hardware cost model.  SET/IN are wires (0 cost).
+GATE_AREA_GE = np.array([0.0, 0.0, 0.67, 1.33, 1.33, 1.0, 1.33, 3.0])
+
+
+def eval_gates(gate_types: jnp.ndarray, in_idx: jnp.ndarray,
+               bits: jnp.ndarray) -> jnp.ndarray:
+    """Evaluate M single-level gates over rows of operand bits.
+
+    Args:
+      gate_types: (M,) int32 gate type ids.
+      in_idx:     (M, 3) int32 operand-bit indices (unused slots arbitrary).
+      bits:       (T, n_bits) int8/int32 operand bits in {0, 1}.
+
+    Returns:
+      (T, M) int8 output bits in {0, 1}.
+    """
+    bits = bits.astype(jnp.int32)
+    x0 = jnp.take(bits, in_idx[:, 0], axis=1)  # (T, M)
+    x1 = jnp.take(bits, in_idx[:, 1], axis=1)
+    x2 = jnp.take(bits, in_idx[:, 2], axis=1)
+
+    outs = jnp.stack([
+        jnp.ones_like(x0),          # SET
+        x0,                         # IN
+        1 - x0,                     # NOT
+        x0 * x1,                    # AND2
+        x0 + x1 - x0 * x1,          # OR2
+        1 - x0 * x1,                # NAND2
+        1 - x0 * x1 * x2,           # NAND3
+        (x0 ^ x1) ^ x2,             # XOR3
+    ], axis=0)                      # (8, T, M)
+    sel = jnp.take_along_axis(
+        outs, gate_types[None, None, :].astype(jnp.int32), axis=0)[0]
+    return sel.astype(jnp.int8)
+
+
+def int_to_bits(values: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Two's-complement bits (LSB first) of integer values. (…,) -> (…, n_bits)."""
+    v = values.astype(jnp.int32) & ((1 << n_bits) - 1)
+    shifts = jnp.arange(n_bits, dtype=jnp.int32)
+    return ((v[..., None] >> shifts) & 1).astype(jnp.int8)
+
+
+def operand_bit_table(bits_a: int, bits_b: int) -> np.ndarray:
+    """All (2^bits_a * 2^bits_b) operand-bit rows, A-bits then B-bits.
+
+    Row order: a-major — row = a_code * 2^bits_b + b_code, where codes are the
+    raw (unsigned) bit patterns.
+    """
+    ta, tb = 1 << bits_a, 1 << bits_b
+    a_codes = np.repeat(np.arange(ta), tb)
+    b_codes = np.tile(np.arange(tb), ta)
+    rows = np.zeros((ta * tb, bits_a + bits_b), dtype=np.int8)
+    for i in range(bits_a):
+        rows[:, i] = (a_codes >> i) & 1
+    for i in range(bits_b):
+        rows[:, bits_a + i] = (b_codes >> i) & 1
+    return rows
+
+
+def signed_products(bits_a: int, bits_b: int) -> np.ndarray:
+    """Exact signed products for every truth-table row (matches row order)."""
+    ta, tb = 1 << bits_a, 1 << bits_b
+    a = np.arange(ta)
+    a = np.where(a >= ta // 2, a - ta, a)
+    b = np.arange(tb)
+    b = np.where(b >= tb // 2, b - tb, b)
+    return (a[:, None] * b[None, :]).reshape(-1).astype(np.float32)
+
+
+def level_products(levels_a: np.ndarray, levels_b: np.ndarray) -> np.ndarray:
+    """Products of arbitrary (non-uniform) quantization levels — Fig 7 path."""
+    return (np.asarray(levels_a, np.float32)[:, None]
+            * np.asarray(levels_b, np.float32)[None, :]).reshape(-1)

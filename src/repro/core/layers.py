@@ -1,0 +1,99 @@
+"""EncodedDense / EncodedConv — the paper's MAC integrated as NN layers.
+
+``mac_mode``:
+  'fp'       — plain fp matmul (baseline training).
+  'int8'     — int8 fake-quant QAT simulation (paper's "Orig." columns).
+  'encoded'  — encoded-MAC forward with STE backward + trainable position
+               weights (paper's "Prop." columns).
+
+Per-layer activation scales are calibration buffers (``aux`` collection) —
+set by ``calibrate_scales`` over sample batches, treated as constants in grad.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.quant.uniform import fake_quant, calibrate_scale, quantize_codes
+from .mac import EncodedMac, encoded_matmul_qat
+
+
+@dataclasses.dataclass(frozen=True)
+class MacConfig:
+    mode: str = "fp"                 # fp | int8 | encoded
+    bits: int = 8
+    per_layer_s: bool = True         # trainable position weights per layer
+    mac: Optional[EncodedMac] = None
+
+    def with_mode(self, mode: str) -> "MacConfig":
+        return dataclasses.replace(self, mode=mode)
+
+
+def dense_init(key, d_in: int, d_out: int, cfg: MacConfig,
+               w_scale: Optional[float] = None) -> dict:
+    std = w_scale if w_scale is not None else (1.0 / np.sqrt(d_in))
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * std}
+    if cfg.mode == "encoded" and cfg.per_layer_s:
+        p["s"] = jnp.asarray(cfg.mac.s_init, jnp.float32)
+    if cfg.mode in ("int8", "encoded"):
+        p["a_scale"] = jnp.ones((), jnp.float32)   # calibration buffer
+    return p
+
+
+def dense_apply(p: dict, x: jnp.ndarray, cfg: MacConfig) -> jnp.ndarray:
+    """x (..., d_in) → (..., d_out) under the configured MAC mode."""
+    w = p["w"]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if cfg.mode == "fp":
+        out = x2 @ w
+    elif cfg.mode == "int8":
+        sw = jax.lax.stop_gradient(calibrate_scale(w, cfg.bits))
+        sa = jax.lax.stop_gradient(p["a_scale"])
+        out = fake_quant(x2, sa, cfg.bits) @ fake_quant(w, sw, cfg.bits)
+    elif cfg.mode == "encoded":
+        sw = jax.lax.stop_gradient(calibrate_scale(w, cfg.bits))
+        sa = jax.lax.stop_gradient(p["a_scale"])
+        s = p["s"] if cfg.per_layer_s else jnp.asarray(cfg.mac.s_init)
+        out = encoded_matmul_qat(x2, w, sa, sw, s, cfg.mac.program, cfg.bits)
+    else:
+        raise ValueError(cfg.mode)
+    return out.reshape(*lead, -1)
+
+
+def calibrate_dense(p: dict, x: jnp.ndarray, cfg: MacConfig,
+                    momentum: float = 0.0) -> dict:
+    """Update the activation scale buffer from a calibration batch."""
+    if "a_scale" not in p:
+        return p
+    new = calibrate_scale(x.reshape(-1, x.shape[-1]), cfg.bits)
+    p = dict(p)
+    p["a_scale"] = momentum * p["a_scale"] + (1 - momentum) * new.reshape(())
+    return p
+
+
+# --- conv as im2col over the encoded GEMM ----------------------------------
+
+def conv_init(key, k_h: int, k_w: int, c_in: int, c_out: int,
+              cfg: MacConfig) -> dict:
+    return dense_init(key, k_h * k_w * c_in, c_out, cfg,
+                      w_scale=1.0 / np.sqrt(k_h * k_w * c_in))
+
+
+def conv_apply(p: dict, x: jnp.ndarray, cfg: MacConfig, k_h: int, k_w: int,
+               stride: int = 1, padding: str = "SAME") -> jnp.ndarray:
+    """NHWC conv via patch extraction + (encoded) dense GEMM."""
+    n, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (k_h, k_w), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches emits channel-major (C, kh, kw) features;
+    # reorder to (kh, kw, C) to match HWIO-flattened dense weights.
+    ph, pw = patches.shape[1], patches.shape[2]
+    patches = patches.reshape(n, ph, pw, c, k_h * k_w)
+    patches = jnp.swapaxes(patches, -1, -2).reshape(n, ph, pw, k_h * k_w * c)
+    return dense_apply(p, patches, cfg)

@@ -1,0 +1,133 @@
+"""High-level encoded-MAC ops: LUT oracle, bitplane XLA path, QAT/STE wrapper.
+
+Artifact management: a default 48-bit encoding for the 8×8-bit multiplier is
+searched once and cached under ``core/artifacts/`` so models load it instead
+of re-searching (regenerate with ``examples/search_encoding.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .circuits import Circuit
+from .encoding import EncodingSpec, fit_circuit
+from .decompose import BitplaneProgram, decompose
+
+_ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+@dataclasses.dataclass
+class EncodedMac:
+    """Bundle of (spec, program) — the static handle models carry."""
+    spec: EncodingSpec
+    program: BitplaneProgram
+
+    @property
+    def s_init(self) -> np.ndarray:
+        return self.spec.s
+
+    @staticmethod
+    def from_spec(spec: EncodingSpec) -> "EncodedMac":
+        return EncodedMac(spec, decompose(spec.circuit))
+
+    @staticmethod
+    def load(name: str) -> "EncodedMac":
+        path = os.path.join(_ARTIFACT_DIR, name + ".json")
+        with open(path) as f:
+            d = json.load(f)
+        circ = Circuit.from_json(json.dumps(d["circuit"]))
+        spec = EncodingSpec(circ, np.asarray(d["s"], np.float32),
+                            float(d["rmse"]))
+        return EncodedMac.from_spec(spec)
+
+    @staticmethod
+    def save(spec: EncodingSpec, name: str) -> str:
+        os.makedirs(_ARTIFACT_DIR, exist_ok=True)
+        path = os.path.join(_ARTIFACT_DIR, name + ".json")
+        with open(path, "w") as f:
+            json.dump({"circuit": json.loads(spec.circuit.to_json()),
+                       "s": np.asarray(spec.s, np.float32).tolist(),
+                       "rmse": float(spec.rmse)}, f)
+        return path
+
+    @staticmethod
+    def default(name: str = "enc48_8x8", m_bits: int = 48,
+                n_samples: int = 512, refine: int = 512,
+                seed: int = 0) -> "EncodedMac":
+        """Load the cached default encoding; search+cache on first use."""
+        try:
+            return EncodedMac.load(name)
+        except FileNotFoundError:
+            from .search import random_search, anneal
+            res = random_search(seed, m_bits, n_samples)
+            if refine:
+                res = anneal(res.spec, seed + 1, refine)
+            EncodedMac.save(res.spec, name)
+            return EncodedMac.from_spec(res.spec)
+
+
+# ---------------------------------------------------------------------------
+# Oracle path (ground truth): 2^ba × 2^bb LUT gather, summed over k.
+# ---------------------------------------------------------------------------
+
+def lut_matmul(x_codes: jnp.ndarray, w_codes: jnp.ndarray,
+               lut: jnp.ndarray, bits_a: int = 8, bits_b: int = 8
+               ) -> jnp.ndarray:
+    """out[m, n] = Σ_k lut[x[m,k], w[k,n]] — the functional ground truth.
+
+    ``lut`` is indexed by raw (two's-complement) codes, a-code-major.
+    O(m·k·n) gathers: use for tests/small shapes only.
+    """
+    xi = (x_codes.astype(jnp.int32) & ((1 << bits_a) - 1))
+    wi = (w_codes.astype(jnp.int32) & ((1 << bits_b) - 1))
+    flat = lut.reshape(-1)
+    idx = xi[:, :, None] * (1 << bits_b) + wi[None, :, :]
+    return jnp.sum(flat[idx], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# QAT / STE wrapper
+# ---------------------------------------------------------------------------
+
+def encoded_matmul_qat(x: jnp.ndarray, w: jnp.ndarray,
+                       scale_x: jnp.ndarray, scale_w: jnp.ndarray,
+                       s: jnp.ndarray, program: BitplaneProgram,
+                       bits: int = 8) -> jnp.ndarray:
+    """Differentiable encoded matmul.
+
+    Forward: quantize → encoded (bitplane) matmul → rescale.
+    Backward: exact position-weight gradients (output is linear in ``s``);
+    straight-through (fp matmul) gradients for ``x`` and ``w`` — the paper's
+    STE fine-tuning scheme.
+    """
+    from repro.quant.uniform import quantize_codes
+    xc = jax.lax.stop_gradient(quantize_codes(x, scale_x, bits))
+    wc = jax.lax.stop_gradient(quantize_codes(w, scale_w, bits))
+    approx = program.apply_f32(xc, wc, s) * (scale_x * scale_w)
+    exact = x @ w
+    # value == approx; d/ds via approx; d/dx, d/dw via the exact term (STE)
+    return approx + (exact - jax.lax.stop_gradient(exact))
+
+
+def encoded_matmul_infer(x: jnp.ndarray, folded, scale_x: jnp.ndarray,
+                         scale_w: jnp.ndarray, program: BitplaneProgram,
+                         bits: int = 8, use_pallas: bool = False
+                         ) -> jnp.ndarray:
+    """Inference path with pre-folded weights (W̃, bias)."""
+    from repro.quant.uniform import quantize_codes
+    Wt, bias = folded
+    xc = quantize_codes(x, scale_x, bits)
+    if use_pallas:
+        from repro.kernels.ops import encoded_matmul as pallas_op
+        out = pallas_op(xc, Wt, bias, np.asarray(program.a_mono_bits))
+    else:
+        A = program.planes(xc, "a").astype(jnp.bfloat16)
+        out = jnp.einsum("umk,ukn->mn", A, Wt.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32) + bias
+    return out * (scale_x * scale_w)

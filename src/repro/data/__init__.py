@@ -1,0 +1,2 @@
+from .synthetic import SyntheticLMDataset, synthetic_images
+from .pipeline import DataPipeline

@@ -1,0 +1,2 @@
+from .costmodel import mac_array_cost, table1, GATE
+from .systolic import simulate_latency, latency_traditional, latency_encoded

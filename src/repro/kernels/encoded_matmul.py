@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused encoded-MAC bitplane matmul.
+
+The paper's encoding-based multiplier projects int8 operand pairs onto M wide
+bits via single-level gates; on TPU this becomes (DESIGN.md §2): expand
+activation codes into U {0,1} monomial planes (pure shift/AND — VPU), then
+accumulate ``Σ_u A_u @ W̃_u`` on the MXU.  The fusion keeps HBM traffic at
+int8 size: planes are expanded *in VMEM per tile*, never materialized in HBM
+(the XLA path materializes a U× bitplane tensor).
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the f32 output tile stays resident
+in VMEM across the K loop (revisited block).  Block shapes are MXU/VPU
+aligned: int8 tiles (32,128)-multiples, bf16 (16,128)-multiples.
+
+VMEM budget per step (defaults bm=bn=bk=128, U≤48):
+  x tile 16 KiB + W̃ tile U·32 KiB (≤1.5 MiB) + out tile 64 KiB  « 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, mono_bits, n_k_blocks):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)                     # (bm, bk)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for u, (s0, s1, s2) in enumerate(mono_bits):         # static unroll (U)
+        plane = ((x >> s0) & (x >> s1) & (x >> s2) & 1).astype(jnp.bfloat16)
+        acc += jnp.dot(plane, w_ref[u],                  # MXU, f32 accum
+                       preferred_element_type=jnp.float32)
+    o_ref[...] += acc
+
+    @pl.when(k == n_k_blocks - 1)
+    def _bias():
+        o_ref[...] += b_ref[...].astype(jnp.float32)[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mono_bits", "bm", "bn", "bk", "interpret"))
+def encoded_matmul_pallas(x_codes: jnp.ndarray, wt: jnp.ndarray,
+                          bias: jnp.ndarray, mono_bits: tuple,
+                          bm: int = 128, bn: int = 128, bk: int = 128,
+                          interpret: bool = False) -> jnp.ndarray:
+    """x_codes (m,k) int8, wt (U,k,n) bf16/f32, bias (n,) → (m,n) f32.
+
+    ``mono_bits``: tuple of (s0,s1,s2) shift triples — static (baked into the
+    kernel as an unrolled loop).  Caller pads shapes to block multiples
+    (see ops.encoded_matmul).
+    """
+    m, k = x_codes.shape
+    u, k2, n = wt.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_kernel, mono_bits=mono_bits,
+                               n_k_blocks=grid[2])
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((u, bk, bn), lambda i, j, kk: (0, kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x_codes, wt.astype(jnp.bfloat16), bias.astype(jnp.float32))

@@ -1,0 +1,97 @@
+"""Pallas TPU flash-attention (forward) — the fusion lever identified in
+EXPERIMENTS.md §Perf: both gemma2 hillclimb cells are dominated by the
+(B,H,Sq,Sk) logits traffic that the XLA chunked path materializes; this
+kernel keeps the running (m, l, acc) statistics and the score block in VMEM.
+
+Grid: (B·H, Sq/bq, Sk/bk) with the K axis innermost — the output tile and
+softmax stats are revisited across K blocks (same pattern as the encoded
+bitplane-matmul kernel).  Causal masking + optional sliding window via the
+absolute block offsets.  bf16 inputs, f32 on-chip accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, bq, bk, n_k, causal, window, cap):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qb = pl.program_id(1)
+    q = q_ref[0]                                    # (bq, D)
+    k = k_ref[0]                                    # (bk, D)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if cap is not None:                       # gemma2-style logit softcap
+        s = cap * jnp.tanh(s / cap)
+    q_pos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), bool)
+    if causal:
+        ok &= q_pos >= k_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "cap", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, scale: float = 1.0, causal: bool = True,
+                    window=None, cap=None, bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """q (BH, Sq, D); k, v (BH, Sk, D) → (BH, Sq, D).
+
+    Head-grouped layouts flatten (B, H) into the leading dim; caller pads
+    Sq/Sk to block multiples (ops.flash_mha handles 4-D + GQA + padding)."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    assert Sq % bq == 0 and Sk % bk == 0
+    grid = (BH, Sq // bq, Sk // bk)
+    kern = functools.partial(_kernel, scale=scale, bq=bq, bk=bk,
+                             n_k=grid[2], causal=causal, window=window,
+                             cap=cap)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,84 @@
+"""Jitted public wrapper for the encoded-matmul kernel (padding + dispatch).
+
+On CPU (this container) the Pallas path runs in interpret mode; on TPU it
+compiles to Mosaic.  ``backend='xla'`` uses the single-GEMM einsum fold.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .encoded_matmul import encoded_matmul_pallas
+from .ref import planes_ref
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def encoded_matmul(x_codes: jnp.ndarray, wt: jnp.ndarray, bias: jnp.ndarray,
+                   mono_bits: np.ndarray, backend: str = "auto",
+                   bm: int = 128, bn: int = 128, bk: int = 128
+                   ) -> jnp.ndarray:
+    """Encoded matmul with pre-folded weights. Pads, dispatches, slices.
+
+    x_codes (m,k) int8 · wt (U,k,n) · bias (n,) → (m,n) f32.
+    """
+    m, k = x_codes.shape
+    n = wt.shape[2]
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend == "xla":
+        A = planes_ref(x_codes, mono_bits).astype(jnp.bfloat16)
+        return jnp.einsum("umk,ukn->mn", A, wt.astype(jnp.bfloat16),
+                          preferred_element_type=jnp.float32) + bias
+    interpret = backend == "pallas_interpret" or jax.default_backend() != "tpu"
+    xp = _pad_to(_pad_to(x_codes, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(wt, bk, 1), bn, 2)
+    bp = _pad_to(bias, bn, 0)
+    mono = tuple(tuple(int(b) for b in row) for row in np.asarray(mono_bits))
+    out = encoded_matmul_pallas(xp, wp, bp, mono, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
+    return out[:m, :n]
+
+
+def flash_mha(q, k, v, *, scale: float, causal: bool = True, window=None,
+              cap=None, bq: int = 128, bk: int = 128, backend: str = "auto"):
+    """4-D GQA wrapper for the flash kernel: q (B,Sq,Hq,D), k/v (B,Sk,Hkv,D).
+
+    KV heads are repeated to q heads (uniform grouping), (B,H) flattened to
+    the kernel's leading dim, Sq/Sk padded to block multiples (padded keys
+    masked by the causal/window test since their positions exceed all query
+    positions... padded QUERIES are sliced off the output)."""
+    from .flash_attention import flash_attention
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hq, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hq, Sk, D)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+    qf = _pad_to(qf, bq, 1)
+    kf = _pad_to(kf, bk, 1)
+    vf = _pad_to(vf, bk, 1)
+    if pk and not causal:
+        raise ValueError("non-causal padding needs an explicit kv mask")
+    interpret = backend == "pallas_interpret" or \
+        (backend == "auto" and jax.default_backend() != "tpu")
+    out = flash_attention(qf, kf, vf, scale=scale, causal=causal,
+                          window=window, cap=cap, bq=bq, bk=bk,
+                          interpret=interpret)
+    out = out[:, :Sq].reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the encoded bitplane matmul kernel.
+
+Contract (shared with the Pallas kernel):
+    out[m, n] = Σ_u A_u(x)[m, k] @ Wt[u, k, n] + bias[n]
+where A_u(x) = AND of the operand bits listed in ``mono_bits[u]`` (shift/AND
+over int8 two's-complement codes).  End-to-end functional ground truth versus
+the paper's LUT definition is established separately in core tests
+(BitplaneProgram.apply == lut_matmul).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def planes_ref(x_codes: jnp.ndarray, mono_bits: np.ndarray) -> jnp.ndarray:
+    """(…,) int codes → (U, …) {0,1} planes."""
+    v = x_codes.astype(jnp.int32)[None]
+    mb = jnp.asarray(mono_bits, jnp.int32)       # (U, 3)
+    idx = (slice(None),) + (None,) * x_codes.ndim
+    p = (v >> mb[idx + (0,)]) & (v >> mb[idx + (1,)]) & (v >> mb[idx + (2,)]) & 1
+    return p.astype(jnp.int8)
+
+
+def encoded_matmul_ref(x_codes: jnp.ndarray, wt: jnp.ndarray,
+                       bias: jnp.ndarray, mono_bits: np.ndarray
+                       ) -> jnp.ndarray:
+    """Oracle: (m,k) int8, (U,k,n) f32, (n,) f32 → (m,n) f32."""
+    A = planes_ref(x_codes, mono_bits).astype(jnp.float32)   # (U, m, k)
+    return jnp.einsum("umk,ukn->mn", A, wt.astype(jnp.float32)) + bias

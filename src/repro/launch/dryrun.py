@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: the dry-run (and only the dry-run) builds
+#   the 512-chip production mesh from host placeholder devices.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell,
+print memory/cost analysis, parse collective bytes, derive roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun                 # full sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k --mesh single                           # one cell
+  ... --list    # show the 40-cell matrix and skip reasons
+
+Results cache to benchmarks/artifacts/dryrun/<cell>.json (resumable sweep).
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs, SHAPES
+from repro.models import init_model, init_cache
+from repro.models.registry import input_specs, runnable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hloparse import collective_bytes, count_ops
+from repro.launch.roofline import Roofline, model_flops
+from repro.parallel.sharding import (set_mesh, param_specs, batch_spec,
+                                     AXIS_BATCH, AXIS_MODEL)
+from repro.parallel.statesharding import opt_state_specs, cache_specs
+from repro.train import make_train_step, init_train_state
+from repro.serve import make_prefill, make_decode_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__),
+                       "../../../benchmarks/artifacts/dryrun")
+
+
+# ---------------------------------------------------------------------------
+# scan-cost probes (XLA cost_analysis counts while bodies ONCE; we probe
+# small UNROLLED layer counts and extrapolate linearly per layer type)
+# ---------------------------------------------------------------------------
+
+def probe_plan(cfg):
+    """→ (probes: [(layer-overrides, counts)], counts_full) for the linear
+    model  metric = base + Σ_type counts·t_type."""
+    if cfg.family == "moe" and cfg.first_k_dense:
+        return ([({"first_k_dense": 1, "n_layers": 1}, (1, 0)),
+                 ({"first_k_dense": 2, "n_layers": 2}, (2, 0)),
+                 ({"first_k_dense": 1, "n_layers": 2}, (1, 1))],
+                (cfg.first_k_dense, cfg.n_layers - cfg.first_k_dense))
+    if cfg.family == "moe":
+        return ([({"n_layers": 1}, (1,)), ({"n_layers": 2}, (2,))],
+                (cfg.n_layers,))
+    if cfg.family == "xlstm" and cfg.slstm_every:
+        n_s = cfg.n_layers // cfg.slstm_every
+        return ([({"n_layers": 1, "slstm_every": 0}, (1, 0)),
+                 ({"n_layers": 2, "slstm_every": 0}, (2, 0)),
+                 ({"n_layers": 2, "slstm_every": 2}, (1, 1))],
+                (cfg.n_layers - n_s, n_s))
+    if cfg.family == "encdec":
+        return ([({"enc_layers": 1, "dec_layers": 1}, (1, 1)),
+                 ({"enc_layers": 2, "dec_layers": 1}, (2, 1)),
+                 ({"enc_layers": 1, "dec_layers": 2}, (1, 2))],
+                (cfg.enc_layers, cfg.dec_layers))
+    gl = {"global_layers": (0,)} if cfg.global_layers else {}
+    return ([(dict(n_layers=1, **gl), (1,)),
+             (dict(n_layers=2, **gl), (2,))], (cfg.n_layers,))
+
+
+def _metrics_of(cost, hlo):
+    coll = collective_bytes(hlo)
+    m = {"flops": float(cost.get("flops", 0.0)),
+         "bytes": float(cost.get("bytes accessed", 0.0))}
+    for k, v in coll.items():
+        m["coll_" + k] = v
+    return m
+
+
+def probe_correct(cfg_full, shape, mesh, build_and_compile, overrides):
+    """Compile small unrolled probes, solve the linear cost model, and
+    return corrected metrics for the full layer counts."""
+    import dataclasses as dc
+    probes, counts_full = probe_plan(cfg_full)
+    rows, ys = [], []
+    keys = None
+    for ovr, counts in probes:
+        # probes don't need to FIT memory — drop grad-accumulation so the
+        # unrolled HLO stays small (accumulation adds only grad-buffer
+        # add/read flops, negligible vs layer compute).
+        cfg_p = dc.replace(cfg_full, scan_layers=False, unroll_scans=True,
+                           microbatch=10 ** 9, **ovr)
+        compiled = build_and_compile(cfg_p)
+        m = _metrics_of(compiled.cost_analysis(), compiled.as_text())
+        del compiled
+        gc.collect()
+        if keys is None:
+            keys = sorted(m)
+        rows.append([1.0] + list(counts))
+        ys.append([m.get(k, 0.0) for k in keys])
+    A = np.asarray(rows)
+    Y = np.asarray(ys)
+    sol, *_ = np.linalg.lstsq(A, Y, rcond=None)     # (1+types, metrics)
+    full_row = np.asarray([1.0] + list(counts_full))
+    corrected = full_row @ sol
+    out = dict(zip(keys, np.maximum(corrected, 0.0).tolist()))
+    out["_probe_rows"] = {f"probe{i}": dict(zip(keys, y))
+                          for i, y in enumerate(ys)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict = None, tag: str = "",
+             probe: bool = True) -> dict:
+    shape = SHAPES[shape_name]
+    cfg0 = get_config(arch)
+    ok, why = runnable(cfg0, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "tag": tag}
+    if not ok:
+        rec.update(status="skip", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    tp = mesh.shape[AXIS_MODEL]
+    import dataclasses as dc
+    cfg = cfg0.for_mesh(tp=tp)
+    if shape.kind == "train" and cfg.microbatch == 0:
+        n_data = chips // tp
+        cfg = dc.replace(cfg, microbatch=max(1, 2 * n_data))
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+
+    def build_and_compile(cfg):
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        with set_mesh(mesh):
+            params_abs = jax.eval_shape(lambda k: init_model(k, cfg), key)
+            params_sh = param_specs(params_abs, mesh, fsdp=cfg.fsdp)
+            specs = input_specs(cfg, shape)
+
+            if shape.kind == "train":
+                state_abs = jax.eval_shape(
+                    lambda k: init_train_state(k, cfg), key)
+                state_sh = opt_state_specs(state_abs, params_sh, mesh)
+                batch_abs = {k: jax.ShapeDtypeStruct(
+                    v.shape, v.dtype,
+                    sharding=batch_spec(mesh, v.shape))
+                    for k, v in specs.items()}
+                state_in = jax.tree_util.tree_map(
+                    lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                                      sharding=s),
+                    state_abs, state_sh)
+                step_fn = make_train_step(cfg)
+                rep = NamedSharding(mesh, P())
+                metrics_sh = {"loss": rep, "aux": rep, "gnorm": rep,
+                              "lr": rep}
+                jf = jax.jit(step_fn, out_shardings=(state_sh, metrics_sh),
+                             donate_argnums=(0,))
+                lowered = jf.lower(state_in, batch_abs)
+            else:
+                max_len = shape.seq_len
+                cache_abs = jax.eval_shape(
+                    lambda: init_cache(cfg, shape.global_batch, max_len))
+                cache_sh = cache_specs(cache_abs, mesh)
+                cache_in = jax.tree_util.tree_map(
+                    lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                                      sharding=s),
+                    cache_abs, cache_sh)
+                params_in = jax.tree_util.tree_map(
+                    lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                                      sharding=s),
+                    params_abs, params_sh)
+                toks_sh = batch_spec(mesh, specs["tokens"].shape)
+                if shape.kind == "prefill":
+                    fn = make_prefill(cfg)
+                    extras = {k: jax.ShapeDtypeStruct(
+                        v.shape, v.dtype,
+                        sharding=batch_spec(mesh, v.shape))
+                        for k, v in specs.items() if k != "tokens"}
+                    jf = jax.jit(
+                        lambda p, c, t, **ex: fn(p, c, t, **ex),
+                        out_shardings=(NamedSharding(mesh, P(
+                            tuple(a for a in AXIS_BATCH
+                                  if a in mesh.axis_names), None, None)),
+                            cache_sh),
+                        donate_argnums=(1,))
+                    lowered = jf.lower(
+                        params_in, cache_in,
+                        jax.ShapeDtypeStruct(specs["tokens"].shape,
+                                             jnp.int32, sharding=toks_sh),
+                        **extras)
+                else:
+                    fn = make_decode_step(cfg)
+                    jf = jax.jit(fn, donate_argnums=(1,))
+                    lowered = jf.lower(
+                        params_in, cache_in,
+                        jax.ShapeDtypeStruct(specs["tokens"].shape,
+                                             jnp.int32, sharding=toks_sh))
+            return lowered.compile()
+
+    t0 = time.time()
+    compiled = build_and_compile(cfg)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    ops = count_ops(hlo)
+    del compiled
+    gc.collect()
+
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    mf = model_flops(cfg, shape)
+
+    corrected = None
+    if probe and not multi_pod:
+        try:
+            corrected = probe_correct(cfg, shape, mesh, build_and_compile,
+                                      overrides)
+        except Exception as e:       # record probe failure, keep raw terms
+            corrected = None
+            rec["probe_error"] = repr(e)
+
+    if corrected is not None:
+        flops = corrected["flops"]
+        bytes_acc = corrected["bytes"]
+        coll_total = corrected.get("coll__total", 0.0)
+    else:
+        flops, bytes_acc, coll_total = raw_flops, raw_bytes, \
+            coll.get("_total", 0.0)
+
+    # cost_analysis is per-device under SPMD (validated in tests).
+    rl = Roofline(flops_per_device=flops,
+                  hbm_bytes_per_device=bytes_acc,
+                  coll_bytes_per_device=coll_total,
+                  chips=chips, model_flops_total=mf)
+
+    rec.update(
+        status="ok",
+        chips=chips,
+        compile_s=round(t_compile, 1),
+        memory={
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        raw={"flops_per_device": raw_flops,
+             "hbm_bytes_per_device": raw_bytes, "collectives": coll},
+        corrected=corrected,
+        op_counts=ops,
+        model_flops=mf,
+        roofline=rl.as_dict(),
+    )
+    return rec
+
+
+def cell_name(arch, shape, mesh_tag, tag=""):
+    s = f"{arch}__{shape}__{mesh_tag}"
+    return s + (f"__{tag}" if tag else "")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", default="",
+                    help="comma k=v config overrides (perf iterations)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                ok, why = runnable(get_config(a), SHAPES[s])
+                print(f"{a:24s} {s:12s} {'RUN' if ok else 'SKIP: ' + why}")
+        return
+
+    overrides = {}
+    for kv in args.override.split(","):
+        if not kv:
+            continue
+        k, v = kv.split("=")
+        overrides[k] = json.loads(v)
+
+    os.makedirs(ART_DIR, exist_ok=True)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                mt = "multi" if mp else "single"
+                out = os.path.join(ART_DIR,
+                                   cell_name(a, s, mt, args.tag) + ".json")
+                if os.path.exists(out) and not args.force:
+                    print(f"[cached] {a} {s} {mt}")
+                    continue
+                print(f"[dryrun] {a} {s} {mt} ...", flush=True)
+                try:
+                    rec = run_cell(a, s, mp, overrides or None, args.tag)
+                except Exception as e:
+                    rec = {"arch": a, "shape": s, "mesh": mt,
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-4000:]}
+                with open(out, "w") as f:
+                    json.dump(rec, f, indent=1)
+                st = rec["status"]
+                extra = ""
+                if st == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} "
+                             f"frac={r['roofline_fraction']:.2f} "
+                             f"compile={rec['compile_s']}s")
+                elif st == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"  -> {st}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

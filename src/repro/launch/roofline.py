@@ -1,0 +1,118 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e targets).
+
+  compute    = HLO_FLOPs / (chips · 197e12)
+  memory     = HLO_bytes / (chips · 819e9)
+  collective = collective_bytes_per_device / 50e9   (ICI, per chip)
+  (pod-axis collectives cross DCI at ~25 GB/s — reported separately)
+
+cost_analysis() is per-device under SPMD in recent JAX — we detect this by
+comparing against an analytic MODEL_FLOPS estimate and normalize to
+per-device terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link / chip
+DCI_BW = 25e9             # bytes/s / chip across pods
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    coll_bytes_per_device: float
+    chips: int
+    model_flops_total: float = 0.0
+
+    @property
+    def t_compute(self):
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self):
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_ratio(self):
+        """MODEL_FLOPS / (HLO flops, all devices)."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops_total / total if total else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """compute-term share of the critical path (higher = closer to
+        compute roofline), assuming no overlap (pessimistic)."""
+        denom = self.t_compute + self.t_memory + self.t_collective
+        return self.t_compute / denom if denom else 0.0
+
+    def as_dict(self):
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 6·N·D (dense) / 6·N_active·D (MoE) + attention term.
+
+    For decode shapes D = global_batch tokens (one step); attention reads
+    the full cache (2·B·S·layers·heads·dim matmul-equivalent FLOPs)."""
+    n_params = cfg.approx_params()
+    if cfg.n_experts:
+        # active params: replace expert count by top_k (+shared)
+        active_ratio_ffn = (cfg.top_k + cfg.n_shared_experts) \
+            / max(cfg.n_experts + cfg.n_shared_experts, 1)
+        moe_ffn = 3 * cfg.d_model * cfg.d_ff_expert * \
+            (cfg.n_experts + cfg.n_shared_experts)
+        L_moe = cfg.n_layers - cfg.first_k_dense
+        n_active = n_params - L_moe * moe_ffn * (1 - active_ratio_ffn)
+    else:
+        n_active = n_params
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        f = 6.0 * n_active * tokens
+        # attention score/value FLOPs: 12·B·S²·H·dh per layer (fwd+bwd)
+        L = cfg.n_layers or (cfg.enc_layers + cfg.dec_layers)
+        f += 12.0 * shape.global_batch * shape.seq_len ** 2 \
+            * cfg.n_heads * cfg.head_dim_r * L * 0.5   # causal half
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        f = 2.0 * n_active * tokens
+        L = cfg.n_layers or (cfg.enc_layers + cfg.dec_layers)
+        f += 4.0 * shape.global_batch * shape.seq_len ** 2 \
+            * cfg.n_heads * cfg.head_dim_r * L * 0.5
+    else:  # decode: one token per sequence
+        B, S = shape.global_batch, shape.seq_len
+        f = 2.0 * n_active * B
+        L = cfg.n_layers or (cfg.enc_layers + cfg.dec_layers)
+        if cfg.use_mla:
+            # scores+AV against the latent + naive per-step K/V expansion
+            f += L * (4.0 * B * S * cfg.n_heads
+                      * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+                      + 2.0 * B * S * cfg.kv_lora_rank * cfg.n_heads
+                      * (cfg.qk_nope_dim + cfg.v_head_dim))
+        elif cfg.family != "xlstm":
+            eff_S = min(S, cfg.sliding_window or S) if cfg.family == \
+                "hybrid" else S
+            f += L * 4.0 * B * eff_S * cfg.n_heads * cfg.head_dim_r
+    return f

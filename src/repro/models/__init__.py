@@ -1,0 +1,2 @@
+from .lm import init_model, apply_model, init_cache
+from .registry import input_specs

@@ -1,0 +1,163 @@
+"""Whisper-style encoder-decoder backbone.
+
+Modality frontend is a STUB per the assignment: ``enc_x`` is precomputed
+frame embeddings (B, S_enc, d_model) — S_enc = seq_len // cfg.enc_len_ratio.
+Encoder adds fixed sinusoidal positions; decoder uses a learned position
+table and ties its output head to the token embedding (as Whisper does).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import (embed_init, embed_apply, norm_init, norm_apply,
+                             mm, softcap)
+from repro.nn import blocks as B
+from repro.nn.attention import init_kv_cache
+from repro.parallel.sharding import constrain, AXIS_BATCH, AXIS_MODEL
+
+
+def _sinusoid(S: int, d: int) -> np.ndarray:
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    return np.concatenate([np.sin(ang), np.cos(ang)], -1).astype(np.float32)
+
+
+def init_encdec(key, cfg):
+    ks = jax.random.split(key, 6)
+    p = {"embed": embed_init(ks[0], cfg.vocab_p, cfg.d_model, cfg.pdtype)}
+    p["pos_table"] = (jax.random.normal(
+        ks[1], (cfg.max_pos_embed, cfg.d_model), jnp.float32) * 0.01
+    ).astype(cfg.pdtype)
+    p["enc"] = jax.vmap(lambda k: B.encoder_block_init(k, cfg))(
+        jax.random.split(ks[2], cfg.enc_layers))
+    p["dec"] = jax.vmap(lambda k: B.xattn_decoder_block_init(k, cfg))(
+        jax.random.split(ks[3], cfg.dec_layers))
+    p.update(norm_init(cfg.d_model, cfg.norm, cfg.pdtype, "enc_norm"))
+    p.update(norm_init(cfg.d_model, cfg.norm, cfg.pdtype, "final_norm"))
+    return p
+
+
+def encode(params, cfg, enc_x):
+    Se = enc_x.shape[1]
+    x = enc_x.astype(cfg.cdtype) \
+        + jnp.asarray(_sinusoid(Se, cfg.d_model), cfg.cdtype)
+    x = constrain(x, AXIS_BATCH, None, None)
+
+    fn = jax.checkpoint(lambda pp, xx: B.encoder_block_apply(pp, xx, cfg)
+                        ) if cfg.remat else \
+        (lambda pp, xx: B.encoder_block_apply(pp, xx, cfg))
+
+    if not cfg.scan_layers:
+        L = jax.tree_util.tree_leaves(params["enc"])[0].shape[0]
+        for i in range(L):
+            p_l = jax.tree_util.tree_map(lambda a: a[i], params["enc"])
+            x = fn(p_l, x)
+    else:
+        x, _ = jax.lax.scan(lambda xx, pp: (fn(pp, xx), None), x,
+                            params["enc"])
+    return norm_apply(params, x, cfg.norm, cfg.norm_eps, "enc_norm")
+
+
+def _decode_stack(params, cfg, x, enc_out, cache_st, positions, pos0,
+                  cross_st=None):
+    def apply_one(p_l, x, c_l, ck_l):
+        if ck_l is None:
+            ekv = B.cross_kv(p_l, enc_out, cfg)
+        else:
+            ekv = (ck_l["ck"], ck_l["cv"])
+        c_in = None if c_l is None else {"self": dict(c_l["self"], pos=pos0)}
+        out, c2, a = B.xattn_decoder_block_apply(
+            p_l, x, ekv, cfg, cache=c_in, positions=positions)
+        if c2 is not None:
+            c2 = {"self": {k: v for k, v in c2["self"].items()
+                           if k != "pos"}}
+        return out, c2, a
+
+    fn = jax.checkpoint(apply_one) if cfg.remat else apply_one
+
+    if not cfg.scan_layers:
+        L = jax.tree_util.tree_leaves(params["dec"])[0].shape[0]
+        cs = []
+        for i in range(L):
+            p_l = jax.tree_util.tree_map(lambda a: a[i], params["dec"])
+            c_l = None if cache_st is None else \
+                jax.tree_util.tree_map(lambda a: a[i], cache_st)
+            ck_l = None if cross_st is None else \
+                jax.tree_util.tree_map(lambda a: a[i], cross_st)
+            x, c2, _ = fn(p_l, x, c_l, ck_l)
+            cs.append(c2)
+        if cache_st is None:
+            return x, None
+        return x, jax.tree_util.tree_map(lambda *ls: jnp.stack(ls, 0), *cs)
+
+    if cache_st is None:
+        def body2(x, p_l):
+            out, _, _ = fn(p_l, x, None, None)
+            return out, None
+        x, _ = jax.lax.scan(body2, x, params["dec"])
+        return x, None
+
+    def body(x, xs):
+        p_l, c_l, ck_l = xs
+        out, c2, _ = fn(p_l, x, c_l, ck_l)
+        return out, c2
+    x, new_cache = jax.lax.scan(body, x, (params["dec"], cache_st, cross_st))
+    return x, new_cache
+
+
+def apply_encdec(params, cfg, tokens, *, enc_x=None, cache=None,
+                 return_hidden=False):
+    B_, S = tokens.shape
+    pos0 = jnp.zeros((), jnp.int32) if cache is None else cache["pos"]
+    x = embed_apply(params["embed"], tokens, cfg.cdtype)
+    ptab = params["pos_table"].astype(cfg.cdtype)
+    x = x + jax.lax.dynamic_slice_in_dim(ptab, pos0, S, axis=0)[None]
+    x = constrain(x, AXIS_BATCH, None, None)
+    positions = pos0 + jnp.arange(S)
+
+    if cache is None:
+        assert enc_x is not None, "enc-dec training needs encoder inputs"
+        enc_out = encode(params, cfg, enc_x)
+        x, _ = _decode_stack(params, cfg, x, enc_out, None, positions, pos0)
+        new_cache = None
+    else:
+        if enc_x is not None:          # prefill: run encoder, fill cross kv
+            enc_out = encode(params, cfg, enc_x)
+            ck = jax.vmap(lambda p_l: B.cross_kv(p_l, enc_out, cfg))(
+                params["dec"])
+            cross = {"ck": ck[0], "cv": ck[1]}
+        else:
+            cross = cache["cross"]
+        x, selfc = _decode_stack(params, cfg, x, None, cache["layers"],
+                                 positions, pos0, cross_st=cross)
+        new_cache = {"pos": pos0 + S, "layers": selfc, "cross": cross}
+
+    h = norm_apply(params, x, cfg.norm, cfg.norm_eps, "final_norm")
+    logits = mm(h, params["embed"]["table"].T, cfg.cdtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    logits = logits.astype(cfg.cdtype)    # keep (B,S,V) temps compact
+    logits = constrain(logits, AXIS_BATCH, None, AXIS_MODEL)
+    aux = jnp.zeros((), jnp.float32)
+    if return_hidden:
+        return logits, new_cache, aux, h
+    return logits, new_cache, aux
+
+
+def init_encdec_cache(cfg, batch: int, max_len: int, enc_len: int = None):
+    enc_len = enc_len or max(1, max_len // cfg.enc_len_ratio)
+    self_c = init_kv_cache(cfg, batch, max_len, cfg.dec_layers)
+    self_c.pop("pos")
+    hd = cfg.head_dim_r
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "layers": {"self": self_c},
+        "cross": {
+            "ck": jnp.zeros((cfg.dec_layers, batch, enc_len, cfg.n_kv_p, hd),
+                            cfg.cdtype),
+            "cv": jnp.zeros((cfg.dec_layers, batch, enc_len, cfg.n_kv_p, hd),
+                            cfg.cdtype),
+        },
+    }

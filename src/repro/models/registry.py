@@ -1,0 +1,46 @@
+"""ShapeDtypeStruct input specs per (arch config × shape) — the dry-run
+contract.  No device allocation; weak-type-correct stand-ins for every model
+input of train_step / prefill / decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model-input ShapeDtypeStructs for the given shape cell.
+
+    train  → {tokens (B,S), labels (B,S)} (+ modality extras)
+    prefill→ {tokens (B,S)} (+ extras)
+    decode → {tokens (B,1)}  (cache is constructed separately)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = cfg.cdtype
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+               "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:   # decode: one new token against a cache of length S
+        out = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+    if shape.kind != "decode":
+        if cfg.family == "encdec":
+            out["enc_x"] = jax.ShapeDtypeStruct(
+                (B, S // cfg.enc_len_ratio, cfg.d_model), f)
+        if cfg.family == "vlm" and cfg.n_patches:
+            out["img"] = jax.ShapeDtypeStruct((B, cfg.n_patches,
+                                               cfg.d_model), f)
+    return out
+
+
+def runnable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is this (arch × shape) cell runnable? (skips per DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 512k dense decode cache is "
+                       "quadratic-cost; no sub-quadratic variant in this "
+                       "architecture (DESIGN.md §4)")
+    return True, ""

@@ -1,0 +1,154 @@
+"""Attention: GQA/MQA/MHA with RoPE, sliding-window, logit softcap, KV cache.
+
+Two compute paths:
+  - dense: full (Sq × Skv) logits — decode steps and short sequences.
+  - kv-chunked: online-softmax scan over KV chunks (flash-style) — long
+    prefill/train.  Keeps the live score block at (Sq_chunk? no — full Sq ×
+    chunk) which is bounded by ``attn_chunk``; compatible with head-sharded
+    TP (scan axis is unsharded).
+
+Head padding for TP: q/kv head counts may be padded to the mesh's model-axis
+size; grouping uses an explicit ``kv_of_q`` index map so original GQA
+grouping is preserved and padded heads (zeroed wo rows) never contaminate
+real outputs.
+
+Decode KV caches are sequence-sharded over the model axis (DESIGN.md §5:
+split-KV / FlashDecoding-style) — softmax reductions over the sharded axis
+lower to psums under SPMD, so no shard_map is needed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain, AXIS_BATCH, AXIS_MODEL
+from .common import linear, linear_init, apply_rope, softcap, norm_init, \
+    norm_apply
+from .attention_mha import mha, NEG_INF, _mask  # grouped-layout core op
+
+
+def kv_of_q_map(n_heads: int, n_kv: int, n_heads_p: int, n_kv_p: int
+                ) -> np.ndarray:
+    """Static q-head → kv-head index map preserving original grouping.
+
+    MHA (group 1) with equal padding keeps the identity map — padded q heads
+    attend their own padded kv head (outputs zeroed by wo rows anyway), which
+    keeps the map shard-preserving (no gather → no all-gather of K/V)."""
+    group = max(1, n_heads // max(n_kv, 1))
+    if group == 1 and n_heads_p == n_kv_p:
+        return np.arange(n_heads_p, dtype=np.int32)
+    idx = np.minimum(np.arange(n_heads_p) // group, n_kv_p - 1)
+    idx[n_heads:] = n_kv_p - 1          # padded q heads → last (padded) kv
+    return idx.astype(np.int32)
+
+
+def attn_init(key, cfg, d_model: Optional[int] = None) -> dict:
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim_r
+    ks = jax.random.split(key, 4)
+    p = {}
+    p.update(linear_init(ks[0], d, cfg.n_heads_p * hd, "wq", cfg.mac,
+                         cfg.qkv_bias, cfg.pdtype))
+    p.update(linear_init(ks[1], d, cfg.n_kv_p * hd, "wk", cfg.mac,
+                         cfg.qkv_bias, cfg.pdtype))
+    p.update(linear_init(ks[2], d, cfg.n_kv_p * hd, "wv", cfg.mac,
+                         cfg.qkv_bias, cfg.pdtype))
+    wo = linear_init(ks[3], cfg.n_heads_p * hd, d, "wo", cfg.mac,
+                     cfg.attn_out_bias, cfg.pdtype)
+    if cfg.n_heads_p != cfg.n_heads:    # zero padded-head output rows
+        mask = np.zeros((cfg.n_heads_p, 1, 1), np.float32)
+        mask[:cfg.n_heads] = 1.0        # static mask — vmap/eval_shape safe
+        wo["wo"] = (wo["wo"].reshape(cfg.n_heads_p, hd, d) * mask
+                    ).reshape(cfg.n_heads_p * hd, d).astype(cfg.pdtype)
+    p.update(wo)
+    if cfg.qk_norm:
+        p.update(norm_init(hd, "rms", cfg.pdtype, "qnorm"))
+        p.update(norm_init(hd, "rms", cfg.pdtype, "knorm"))
+    return p
+
+
+def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
+               cache=None, positions=None) -> tuple:
+    """Self-attention over x (B, S, d).
+
+    cache: None (train/prefill-no-cache) or dict {k, v, pos} for decode /
+    prefill-fill.  Returns (out, new_cache_or_None).
+    ``layer_window``: per-layer override (traced scalar or None) for
+    local/global alternating patterns — None means cfg.sliding_window.
+    """
+    B, S, _ = x.shape
+    hd = cfg.head_dim_r
+    cdt = cfg.cdtype
+    q = linear(p, "wq", x, cfg.mac, cdt).reshape(B, S, cfg.n_heads_p, hd)
+    k = linear(p, "wk", x, cfg.mac, cdt).reshape(B, S, cfg.n_kv_p, hd)
+    v = linear(p, "wv", x, cfg.mac, cdt).reshape(B, S, cfg.n_kv_p, hd)
+    if cfg.qk_norm:
+        q = norm_apply(p, q, "rms", cfg.norm_eps, "qnorm")
+        k = norm_apply(p, k, "rms", cfg.norm_eps, "knorm")
+
+    if positions is None:
+        pos0 = 0 if cache is None else cache["pos"]
+        positions = pos0 + jnp.arange(S)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    window = layer_window if layer_window is not None else cfg.sliding_window
+    scale = cfg.attn_scale or (1.0 / np.sqrt(hd))
+    kv_map = kv_of_q_map(cfg.n_heads, cfg.n_kv_heads, cfg.n_heads_p,
+                         cfg.n_kv_p)
+
+    def parallel_attn(q, k, v):
+        if cfg.flash_attention and window is None or \
+                (cfg.flash_attention and isinstance(window, int)):
+            from repro.kernels.ops import flash_mha
+            return flash_mha(q, k, v, scale=scale, causal=True,
+                             window=window if isinstance(window, int)
+                             else None, cap=cfg.attn_softcap)
+        return mha(q, k, v, kv_map, scale=scale, q_pos=positions,
+                   k_pos=positions, window=window, cap=cfg.attn_softcap,
+                   chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+
+    new_cache = None
+    if cache is None:
+        out = parallel_attn(q, k, v)
+    else:
+        ck, cv, pos = cache["k"], cache["v"], cache["pos"]
+        # write new k/v at [pos : pos+S) (decode S=1; prefill S=prompt)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, pos, 0, 0))
+        ck = constrain(ck, AXIS_BATCH, AXIS_MODEL, None, None)
+        cv = constrain(cv, AXIS_BATCH, AXIS_MODEL, None, None)
+        if S > 1:
+            # prefill (from position 0): chunked parallel attention over the
+            # freshly projected k/v — never materializes S×S scores
+            out = parallel_attn(q, k, v)
+        else:
+            # decode: dense row against the sequence-sharded cache
+            Smax = ck.shape[1]
+            k_pos = jnp.arange(Smax)
+            k_valid = k_pos < (pos + S)
+            out = mha(q, ck, cv, kv_map, scale=scale, q_pos=positions,
+                      k_pos=k_pos, window=window, cap=cfg.attn_softcap,
+                      chunk=0, k_valid=k_valid)
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+
+    out = out.reshape(B, S, cfg.n_heads_p * hd)
+    return linear(p, "wo", out, cfg.mac, cdt), new_cache
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, n_layers: int,
+                  dtype=None) -> dict:
+    dt = dtype or cfg.cdtype
+    hd = cfg.head_dim_r
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_p, hd), dt),
+        "v": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_p, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }

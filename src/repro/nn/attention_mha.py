@@ -1,0 +1,120 @@
+"""Core attention op with grouped-internal layout (§Perf iteration).
+
+The (kv-head, group) factorization is carried through scores, softmax and
+the AV product; the merge to flat q-heads happens ONCE at the end — merging
+per KV-chunk forces SPMD resharding on the model axis every chunk (measured
++1.5 s collective on gemma2-27b prefill_32k).
+Inputs stay in their storage dtype (bf16) with f32 accumulation via
+preferred_element_type — no materialized f32 K/V copies.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import softcap
+
+NEG_INF = -2.0e38
+
+
+def _mask(q_pos, k_pos, window, causal: bool = True):
+    """(Sq, Sk) boolean allow-mask from 1-D absolute positions."""
+    d = q_pos[:, None] - k_pos[None, :]
+    ok = d >= 0 if causal else jnp.ones_like(d, bool)
+    if window is not None:
+        ok = ok & (d < window)
+    return ok
+
+
+def mha(q, k, v, kv_of_q: np.ndarray, *, scale: float,
+        q_pos, k_pos, window=None, cap=None, causal=True,
+        chunk: int = 0, k_valid: Optional[jnp.ndarray] = None,
+        unroll: bool = False):
+    """q (B,Sq,Hq,D); k,v (B,Sk,Hkv,D[v]) → (B,Sq,Hq,Dv) in q.dtype."""
+    B, Sq, Hq, D = q.shape
+    Dv = v.shape[-1]
+    Sk, Hkv = k.shape[1], k.shape[2]
+    f32 = jnp.float32
+    kv_np = np.asarray(kv_of_q)
+    identity = Hkv == Hq and np.array_equal(kv_np, np.arange(Hq))
+    group = Hq // Hkv if Hkv and Hq % Hkv == 0 else 0
+    uniform = group > 1 and np.array_equal(
+        kv_np, np.minimum(np.arange(Hq) // group, Hkv - 1))
+
+    if identity:
+        G, He = 1, Hq
+    elif uniform:
+        G, He = group, Hkv
+    else:
+        # irregular map: gather K/V to q-heads once (head-sharding breaks —
+        # only archs with non-divisible grouping pay this; DESIGN.md §4)
+        k = jnp.take(k, jnp.asarray(kv_np), axis=2)
+        v = jnp.take(v, jnp.asarray(kv_np), axis=2)
+        G, He, Hkv = 1, Hq, Hq
+
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(B, Sq, He, G, D)
+    # hoisted single f32 Q for the chunked path (casting inside the chunk
+    # body re-materializes full-S Q every iteration — §Perf iter4 lesson)
+    qg32 = qg.astype(f32)
+
+    def logits_block(kb, upcast):             # → (B,He,G,Sq,Ck) f32
+        kb = kb.astype(f32) if upcast else kb
+        qq = qg32 if upcast else qg
+        return jnp.einsum("bqhgd,bkhd->bhgqk", qq, kb,
+                          preferred_element_type=f32)
+
+    def weighted_v(p, vb, upcast):            # p (B,He,G,Sq,Ck) f32
+        # probs stay f32: casting them to bf16 materializes a second
+        # logits-sized tensor (§Perf iter2 regression on gemma2 prefill)
+        vb = vb.astype(f32) if upcast else vb
+        return jnp.einsum("bhgqk,bkhd->bqhgd", p, vb,
+                          preferred_element_type=f32)
+
+    if chunk and Sk > chunk:
+        if Sk % chunk:            # fit the chunk to Sk (e.g. meta offsets)
+            chunk = max(d for d in range(1, chunk + 1) if Sk % d == 0)
+        n_chunks = Sk // chunk
+        ks = k.reshape(B, n_chunks, chunk, *k.shape[2:]).swapaxes(0, 1)
+        vs = v.reshape(B, n_chunks, chunk, *v.shape[2:]).swapaxes(0, 1)
+        kpos = k_pos.reshape(n_chunks, chunk)
+        kval = (k_valid.reshape(n_chunks, chunk) if k_valid is not None
+                else jnp.ones((n_chunks, chunk), bool))
+
+        def body(carry, xs):
+            m_i, l_i, acc = carry             # (B,He,G,Sq)×2, (B,Sq,He,G,Dv)
+            kb, vb, kp, kvl = xs
+            lg = softcap(logits_block(kb, True), cap)
+            ok = _mask(q_pos, kp, window, causal) & kvl[None, :]
+            lg = jnp.where(ok[None, None, None], lg, NEG_INF)
+            m_new = jnp.maximum(m_i, lg.max(-1))
+            alpha = jnp.exp(m_i - m_new)
+            pexp = jnp.exp(lg - m_new[..., None])
+            l_new = l_i * alpha + pexp.sum(-1)
+            acc = acc * alpha.transpose(0, 3, 1, 2)[..., None] \
+                + weighted_v(pexp, vb, True)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, He, G, Sq), NEG_INF, f32),
+                jnp.zeros((B, He, G, Sq), f32),
+                jnp.zeros((B, Sq, He, G, Dv), f32))
+        if unroll:       # cost probes: XLA counts while bodies once
+            carry = init
+            for i in range(n_chunks):
+                carry, _ = body(carry, (ks[i], vs[i], kpos[i], kval[i]))
+            m_f, l_f, acc = carry
+        else:
+            (m_f, l_f, acc), _ = jax.lax.scan(body, init,
+                                              (ks, vs, kpos, kval))
+        out = acc / jnp.maximum(l_f, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    else:
+        lg = softcap(logits_block(k, False), cap)
+        ok = _mask(q_pos, k_pos, window, causal)
+        if k_valid is not None:
+            ok = ok & k_valid[None, :]
+        lg = jnp.where(ok[None, None, None], lg, NEG_INF)
+        p = jax.nn.softmax(lg, axis=-1)
+        out = weighted_v(p, v, False)
+    return out.reshape(B, Sq, Hq, Dv).astype(q.dtype)

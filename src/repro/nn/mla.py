@@ -1,0 +1,145 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) with decoupled RoPE.
+
+Cache stores only the shared latent (c_kv, k_rope) — (S, kv_lora + rope_dim)
+per token.  Because the latent is shared across all 128 heads, TP-over-heads
+cannot shard it; decode uses a *sequence-sharded* cache (split-KV): softmax
+statistics over the sharded axis lower to psums under SPMD (DESIGN.md §5).
+
+Two decode paths:
+  - naive   (baseline): expand per-head K/V from the full cached latent each
+    step — O(S · r · H · dn) per token.
+  - absorbed (optimized; cfg.mla_absorb): fold W_uk into q and W_uv after the
+    probability-weighted latent sum — S-independent projections.  This is a
+    §Perf hillclimb lever.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain, AXIS_BATCH, AXIS_MODEL
+from .common import linear, linear_init, norm_init, norm_apply, apply_rope
+from .attention import mha, NEG_INF
+
+
+def mla_init(key, cfg) -> dict:
+    d, H = cfg.d_model, cfg.n_heads_p
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    p.update(linear_init(ks[0], d, cfg.q_lora_rank, "wq_a", cfg.mac,
+                         False, cfg.pdtype))
+    p.update(norm_init(cfg.q_lora_rank, "rms", cfg.pdtype, "qa_norm"))
+    p.update(linear_init(ks[1], cfg.q_lora_rank, H * (dn + dr), "wq_b",
+                         cfg.mac, False, cfg.pdtype))
+    p.update(linear_init(ks[2], d, cfg.kv_lora_rank, "wkv_a", cfg.mac,
+                         False, cfg.pdtype))
+    p.update(norm_init(cfg.kv_lora_rank, "rms", cfg.pdtype, "kva_norm"))
+    p.update(linear_init(ks[3], d, dr, "wkr", cfg.mac, False, cfg.pdtype))
+    p.update(linear_init(ks[4], cfg.kv_lora_rank, H * dn, "wk_b", cfg.mac,
+                         False, cfg.pdtype))
+    p.update(linear_init(ks[5], cfg.kv_lora_rank, H * dv, "wv_b", cfg.mac,
+                         False, cfg.pdtype))
+    p.update(linear_init(ks[6], H * dv, d, "wo", cfg.mac, False, cfg.pdtype))
+    return p
+
+
+def _q_proj(p, x, cfg):
+    B, S, _ = x.shape
+    H = cfg.n_heads_p
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = norm_apply(p, linear(p, "wq_a", x, cfg.mac, cfg.cdtype),
+                    "rms", cfg.norm_eps, "qa_norm")
+    q = linear(p, "wq_b", cq, cfg.mac, cfg.cdtype).reshape(B, S, H, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def mla_apply(p: dict, x: jnp.ndarray, cfg, *, cache=None, positions=None
+              ) -> tuple:
+    B, S, _ = x.shape
+    H = cfg.n_heads_p
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    scale = 1.0 / np.sqrt(dn + dr)
+    if positions is None:
+        pos0 = 0 if cache is None else cache["pos"]
+        positions = pos0 + jnp.arange(S)
+
+    qn, qr = _q_proj(p, x, cfg)
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    ckv = norm_apply(p, linear(p, "wkv_a", x, cfg.mac, cfg.cdtype),
+                     "rms", cfg.norm_eps, "kva_norm")         # (B,S,r)
+    kr = apply_rope(linear(p, "wkr", x, cfg.mac, cfg.cdtype)
+                    .reshape(B, S, 1, dr), positions, cfg.rope_theta)
+
+    if cache is None or S > 1:
+        # parallel path (training, or prefill-from-0 with cache write):
+        # chunked attention over per-head expanded K/V — no S×S scores
+        kn = linear(p, "wk_b", ckv, cfg.mac, cfg.cdtype).reshape(B, S, H, dn)
+        v = linear(p, "wv_b", ckv, cfg.mac, cfg.cdtype).reshape(B, S, H, dv)
+        k = jnp.concatenate([kn, jnp.broadcast_to(kr, (B, S, H, dr))], -1)
+        q = jnp.concatenate([qn, jnp.broadcast_to(qr, (B, S, H, dr))], -1)
+        ident = np.arange(H, dtype=np.int32)
+        out = mha(q, k, v, ident, scale=scale, q_pos=positions,
+                  k_pos=positions, chunk=cfg.attn_chunk,
+                  unroll=cfg.unroll_scans)
+        new_cache = None
+        if cache is not None:
+            cc = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype),
+                (0, cache["pos"], 0))
+            ckr2 = jax.lax.dynamic_update_slice(
+                cache["kr"], kr[:, :, 0].astype(cache["kr"].dtype),
+                (0, cache["pos"], 0))
+            cc = constrain(cc, AXIS_BATCH, AXIS_MODEL, None)
+            ckr2 = constrain(ckr2, AXIS_BATCH, AXIS_MODEL, None)
+            new_cache = {"ckv": cc, "kr": ckr2, "pos": cache["pos"] + S}
+    else:
+        cc, ckr, pos = cache["ckv"], cache["kr"], cache["pos"]
+        cc = jax.lax.dynamic_update_slice(cc, ckv.astype(cc.dtype),
+                                          (0, pos, 0))
+        ckr = jax.lax.dynamic_update_slice(ckr, kr[:, :, 0].astype(ckr.dtype),
+                                           (0, pos, 0))
+        cc = constrain(cc, AXIS_BATCH, AXIS_MODEL, None)
+        ckr = constrain(ckr, AXIS_BATCH, AXIS_MODEL, None)
+        Smax = cc.shape[1]
+        valid = jnp.arange(Smax) < (pos + S)
+        ccf = cc.astype(jnp.float32)
+        score_r = jnp.einsum("bshd,btd->bhst", qr.astype(jnp.float32),
+                             ckr.astype(jnp.float32))          # (B,H=1→bc,S,T)
+        if cfg.mla_absorb:
+            wkb = p["wk_b"].astype(jnp.float32).reshape(r, H, dn)
+            qt = jnp.einsum("bshn,rhn->bshr", qn.astype(jnp.float32), wkb)
+            score_n = jnp.einsum("bshr,btr->bhst", qt, ccf)
+        else:
+            kn = jnp.einsum("btr,rhn->bthn", ccf,
+                            p["wk_b"].astype(jnp.float32).reshape(r, H, dn))
+            score_n = jnp.einsum("bshn,bthn->bhst",
+                                 qn.astype(jnp.float32), kn)
+        lg = (score_n + score_r) * scale
+        lg = jnp.where(valid[None, None, None, :], lg, NEG_INF)
+        prob = jax.nn.softmax(lg, axis=-1)
+        if cfg.mla_absorb:
+            o_lat = jnp.einsum("bhst,btr->bshr", prob, ccf)
+            wvb = p["wv_b"].astype(jnp.float32).reshape(r, H, dv)
+            out = jnp.einsum("bshr,rhv->bshv", o_lat, wvb)
+        else:
+            v = jnp.einsum("btr,rhv->bthv", ccf,
+                           p["wv_b"].astype(jnp.float32).reshape(r, H, dv))
+            out = jnp.einsum("bhst,bthv->bshv", prob, v)
+        out = out.astype(cfg.cdtype)
+        new_cache = {"ckv": cc, "kr": ckr, "pos": pos + S}
+
+    out = out.reshape(B, S, H * dv)
+    return linear(p, "wo", out, cfg.mac, cfg.cdtype), new_cache
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, n_layers: int,
+                   dtype=None) -> dict:
+    dt = dtype or cfg.cdtype
+    return {
+        "ckv": jnp.zeros((n_layers, batch, max_len, cfg.kv_lora_rank), dt),
+        "kr": jnp.zeros((n_layers, batch, max_len, cfg.qk_rope_dim), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }

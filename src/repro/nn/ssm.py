@@ -1,0 +1,155 @@
+"""Selective SSM (Mamba-1 style) — the SSM path of Hymba's hybrid heads.
+
+Training/prefill uses a *chunked* scan: outer lax.scan over time chunks
+(carrying the (B, d_inner, N) state), inner remat'd per-step scan — bounds
+backward residuals to one chunk (DESIGN.md §4).  Decode is a single
+recurrence step with a rolling conv buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import linear, linear_init, act_fn
+
+
+def ssm_init(key, cfg, d_model=None) -> dict:
+    d = d_model or cfg.d_model
+    di = cfg.ssm_expand * d
+    N = cfg.ssm_state
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 8)
+    p = {}
+    p.update(linear_init(ks[0], d, 2 * di, "win", cfg.mac, False, cfg.pdtype))
+    p["conv_w"] = (jax.random.normal(ks[1], (cfg.ssm_conv, di), jnp.float32)
+                   / np.sqrt(cfg.ssm_conv)).astype(cfg.pdtype)
+    p["conv_b"] = jnp.zeros((di,), cfg.pdtype)
+    p.update(linear_init(ks[2], di, dt_rank + 2 * N, "wbcdt", cfg.mac,
+                         False, cfg.pdtype))
+    p["wdt"] = (jax.random.normal(ks[3], (dt_rank, di), jnp.float32)
+                / np.sqrt(dt_rank)).astype(cfg.pdtype)
+    p["dt_bias"] = jnp.log(jnp.exp(
+        jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                   np.log(1e-3), np.log(1e-1))) - 1.0 + 1e-9)
+    ).astype(jnp.float32)
+    p["a_log"] = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))).astype(jnp.float32)
+    p["dskip"] = jnp.ones((di,), jnp.float32)
+    p.update(linear_init(ks[5], di, d, "wout", cfg.mac, False, cfg.pdtype))
+    return p
+
+
+def _conv_causal(x, w, b, init_buf=None):
+    """Depthwise causal conv along time. x (B,S,di), w (K,di)."""
+    K = w.shape[0]
+    pad = x if init_buf is None else jnp.concatenate([init_buf, x], 1)
+    if init_buf is None:
+        pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssm_params(p, xc, cfg):
+    N = cfg.ssm_state
+    dt_rank = p["wdt"].shape[0]
+    bcdt = linear(p, "wbcdt", xc, cfg.mac, cfg.cdtype)
+    dt_lr = bcdt[..., :dt_rank]
+    Bm = bcdt[..., dt_rank:dt_rank + N].astype(jnp.float32)
+    Cm = bcdt[..., dt_rank + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,rd->...d", dt_lr.astype(jnp.float32),
+                   p["wdt"].astype(jnp.float32)) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])                       # (di, N)
+    dA = jnp.exp(dt[..., None] * A)                # (..., di, N)
+    dBx = dt[..., None] * Bm[..., None, :] * xc.astype(jnp.float32)[..., None]
+    return dA, dBx, Cm
+
+
+def ssm_scan(p, xc, cfg, h0=None, chunk: int = 256):
+    """Chunked selective scan. xc (B,S,di) conv+act output.
+
+    Returns (y (B,S,di) f32, h_final (B,di,N))."""
+    B, S, di = xc.shape
+    N = cfg.ssm_state
+    dA, dBx, Cm = _ssm_params(p, xc, cfg)          # (B,S,di,N) ×2, (B,S,N)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fall back to single chunk for odd lengths
+    n_chunks = S // chunk
+
+    def per_chunk(h, xs):
+        dA_c, dBx_c, C_c = xs                      # (chunk,B,di,N)…
+
+        @jax.checkpoint
+        def run(h, dA_c, dBx_c, C_c):
+            def step(hc, xs_t):
+                a, bx, c = xs_t
+                hc = a * hc + bx
+                y = jnp.einsum("bdn,bn->bd", hc, c)
+                return hc, y
+            return jax.lax.scan(step, h, (dA_c, dBx_c, C_c))
+
+        h, ys = run(h, dA_c, dBx_c, C_c)
+        return h, ys
+
+    xs = tuple(a.reshape(B, n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
+               .swapaxes(1, 2) for a in (dA, dBx, Cm))
+    if cfg.unroll_scans:
+        h, ys_l = h0, []
+        for i in range(n_chunks):
+            h, y_i = per_chunk(h, tuple(a[i] for a in xs))
+            ys_l.append(y_i)
+        ys = jnp.stack(ys_l, 0)
+    else:
+        h, ys = jax.lax.scan(per_chunk, h0, xs)    # ys (n_chunks,chunk,B,di)
+    y = ys.reshape(S, B, di).swapaxes(0, 1)
+    y = y + xc.astype(jnp.float32) * p["dskip"]
+    return y, h
+
+
+def ssm_apply(p: dict, x: jnp.ndarray, cfg, *, cache=None) -> tuple:
+    """Full Mamba path: in-proj → conv → SSM → gate → out-proj.
+
+    cache: None (train/prefill discards state) or {conv (B,K-1,di),
+    h (B,di,N)} for decode.  Returns (out (B,S,d), new_cache)."""
+    B, S, _ = x.shape
+    h_in = linear(p, "win", x, cfg.mac, cfg.cdtype)
+    xi, z = jnp.split(h_in, 2, axis=-1)
+    if cache is None:
+        xc = act_fn("silu")(_conv_causal(xi, p["conv_w"].astype(jnp.float32),
+                                         p["conv_b"].astype(jnp.float32)))
+        y, h = ssm_scan(p, xc, cfg)
+        new_cache = None
+    else:
+        K = p["conv_w"].shape[0]
+        buf = jnp.concatenate([cache["conv"], xi.astype(cache["conv"].dtype)],
+                              1)
+        xc = act_fn("silu")(_conv_causal(
+            xi, p["conv_w"].astype(jnp.float32),
+            p["conv_b"].astype(jnp.float32), init_buf=cache["conv"]))
+        if S > 1:                                   # prefill: chunked scan
+            y, h = ssm_scan(p, xc, cfg, h0=cache["h"])
+        else:                                       # decode: one step
+            dA, dBx, Cm = _ssm_params(p, xc, cfg)
+            h = dA[:, 0] * cache["h"] + dBx[:, 0]
+            y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None] \
+                + xc.astype(jnp.float32) * p["dskip"]
+        new_cache = {"conv": buf[:, -(K - 1):], "h": h}
+    out = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cfg.cdtype)
+    return linear(p, "wout", out, cfg.mac, cfg.cdtype), new_cache
+
+
+def init_ssm_cache(cfg, batch: int, n_layers: int, d_model=None, dtype=None):
+    d = d_model or cfg.d_model
+    di = cfg.ssm_expand * d
+    dt = dtype or cfg.cdtype
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, di), dt),
+        "h": jnp.zeros((n_layers, batch, di, cfg.ssm_state), jnp.float32),
+    }

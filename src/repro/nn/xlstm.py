@@ -1,0 +1,278 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar
+memory, sequential scan with head-block-diagonal recurrence).
+
+mLSTM chunkwise (stabilized exponential gating — DESIGN.md §4):
+  carry (C (B,H,dk,dv), n (B,H,dk), m (B,H)); per chunk with inclusive
+  log-forget cumsum b_j and g_j = ĩ_j − b_j, M_i = max(m₀, cummax g),
+    intra weight  exp(g_j − M_i) · (qᵢ·kⱼ)   (j ≤ i)
+    inter weight  exp(m₀ − M_i) · (C₀ᵀ qᵢ)
+    h_i = num_i / max(|den_i|, exp(−(b_i + M_i)))
+  chunk-exit state uses M_end = max(m₀, max_j g_j).
+Validated against the exact per-step recurrence in tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import linear, linear_init, norm_init, norm_apply, act_fn
+
+
+# --------------------------------- mLSTM -----------------------------------
+
+def mlstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    H = cfg.n_heads
+    dh = di // H
+    ks = jax.random.split(key, 8)
+    p = {}
+    p.update(linear_init(ks[0], d, 2 * di, "wi", cfg.mac, False, cfg.pdtype))
+    p["conv_w"] = (jax.random.normal(ks[1], (4, di), jnp.float32) * 0.3
+                   ).astype(cfg.pdtype)
+    p["conv_b"] = jnp.zeros((di,), cfg.pdtype)
+    # block-diagonal per-head q/k/v
+    for nm, kk in (("bq", ks[2]), ("bk", ks[3]), ("bv", ks[4])):
+        p[nm] = (jax.random.normal(kk, (H, dh, dh), jnp.float32)
+                 / np.sqrt(dh)).astype(cfg.pdtype)
+    p["wig"] = (jax.random.normal(ks[5], (di, H), jnp.float32) * 0.01
+                ).astype(jnp.float32)
+    p["big"] = jnp.full((H,), -3.0, jnp.float32)
+    p["wfg"] = (jax.random.normal(ks[6], (di, H), jnp.float32) * 0.01
+                ).astype(jnp.float32)
+    p["bfg"] = jnp.linspace(3.0, 6.0, H).astype(jnp.float32)
+    p.update(norm_init(dh, "rms", cfg.pdtype, "hnorm"))
+    p.update(linear_init(ks[7], di, d, "wo", cfg.mac, False, cfg.pdtype))
+    return p
+
+
+def _mlstm_qkvif(p, x, cfg, conv_buf=None):
+    B, S, _ = x.shape
+    di = p["conv_w"].shape[1]
+    H = cfg.n_heads
+    dh = di // H
+    h = linear(p, "wi", x, cfg.mac, cfg.cdtype)
+    xi, z = jnp.split(h, 2, axis=-1)
+    from .ssm import _conv_causal
+    xc = act_fn("silu")(_conv_causal(xi, p["conv_w"].astype(jnp.float32),
+                                     p["conv_b"].astype(jnp.float32),
+                                     init_buf=conv_buf))
+    if conv_buf is not None:
+        K = p["conv_w"].shape[0]
+        new_buf = jnp.concatenate(
+            [conv_buf, xi.astype(conv_buf.dtype)], 1)[:, -(K - 1):]
+    else:
+        new_buf = None
+    xc = xc.astype(cfg.cdtype)
+    xh = xc.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["bq"].astype(cfg.cdtype))
+    k = jnp.einsum("bshd,hde->bshe", xh, p["bk"].astype(cfg.cdtype)) \
+        / np.sqrt(dh)
+    v = jnp.einsum("bshd,hde->bshe", xi.reshape(B, S, H, dh),
+                   p["bv"].astype(cfg.cdtype))
+    xcf = xc.astype(jnp.float32)
+    ig = jnp.einsum("bsd,dh->bsh", xcf, p["wig"]) + p["big"]
+    fg = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", xcf, p["wfg"]) + p["bfg"])
+    return q, k, v, ig, fg, z, new_buf
+
+
+def mlstm_step(carry, qkvif):
+    """Exact single-step recurrence (decode + test oracle).
+
+    carry: (C (B,H,dk,dv), n (B,H,dk), m (B,H)); inputs for one t."""
+    C, n, m, = carry
+    q, k, v, ig, fg = qkvif                       # (B,H,dh)…, (B,H)
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    m_new = jnp.maximum(fg + m, ig)
+    fs = jnp.exp(fg + m - m_new)[..., None]
+    is_ = jnp.exp(ig - m_new)[..., None]
+    C = fs[..., None] * C + is_[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = fs * n + is_ * kf
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return (C, n, m_new), (num / den)
+
+
+def mlstm_chunkwise(q, k, v, ig, fg, carry=None, chunk: int = 256,
+                    unroll: bool = False):
+    """Chunkwise-parallel mLSTM. q,k,v (B,S,H,dh); ig,fg (B,S,H) raw gates.
+
+    Returns (h (B,S,H,dh) f32, carry)."""
+    B, S, H, dh = q.shape
+    if carry is None:
+        carry = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+    L = min(chunk, S)
+    if S % L:
+        L = S
+    nc = S // L
+
+    def reshape_c(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).swapaxes(0, 1)
+
+    qs, ks_, vs = map(reshape_c, (q, k, v))            # (nc,B,L,H,dh)
+    igs, fgs = map(reshape_c, (ig, fg))                # (nc,B,L,H)
+
+    def per_chunk(st, xs):
+        C0, n0, m0 = st
+        qc, kc, vc, igc, fgc = xs
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        b = jnp.cumsum(fgc, axis=1)                    # (B,L,H) inclusive
+        g = igc - b
+        M = jnp.maximum(m0[:, None], jax.lax.cummax(g, axis=1))  # (B,L,H)
+        m_i = b + M
+        # intra: scores (B,H,L,L): w_ij = q_i·k_j · exp(b_i−b_j+ig_j−m_i)
+        scores = jnp.einsum("blhd,bjhd->bhlj", qf, kf)
+        decay = jnp.exp((g.transpose(0, 2, 1)[:, :, None, :]
+                         - M.transpose(0, 2, 1)[:, :, :, None]))
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        wmat = jnp.where(causal[None, None], scores * decay, 0.0)
+        num = jnp.einsum("bhlj,bjhd->blhd", wmat, vf)
+        den = jnp.einsum("bhlj->blh", wmat)
+        # inter: exp(m0 − M_i)
+        inter_w = jnp.exp(m0[:, None] - M)             # (B,L,H)
+        num = num + inter_w[..., None] \
+            * jnp.einsum("bhkv,blhk->blhv", C0, qf)
+        den = den + inter_w * jnp.einsum("bhk,blhk->blh", n0, qf)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # chunk-exit state
+        M_end = jnp.maximum(m0, g.max(axis=1))          # (B,H)
+        w_end = jnp.exp(g - M_end[:, None])             # (B,L,H)
+        C1 = jnp.exp(m0 - M_end)[..., None, None] * C0 \
+            + jnp.einsum("blh,blhk,blhv->bhkv", w_end, kf, vf)
+        n1 = jnp.exp(m0 - M_end)[..., None] * n0 \
+            + jnp.einsum("blh,blhk->bhk", w_end, kf)
+        m1 = b[:, -1] + M_end
+        return (C1, n1, m1), h
+
+    if unroll:
+        hs_l = []
+        for i in range(nc):
+            carry, h_i = per_chunk(carry, (qs[i], ks_[i], vs[i], igs[i],
+                                           fgs[i]))
+            hs_l.append(h_i)
+        hs = jnp.stack(hs_l, 0)
+    else:
+        carry, hs = jax.lax.scan(per_chunk, carry, (qs, ks_, vs, igs, fgs))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    return h, carry
+
+
+def mlstm_apply(p: dict, x: jnp.ndarray, cfg, *, cache=None) -> tuple:
+    B, S, d = x.shape
+    H = cfg.n_heads
+    conv_buf = None if cache is None else cache["conv"]
+    q, k, v, ig, fg, z, new_buf = _mlstm_qkvif(p, x, cfg, conv_buf)
+    if cache is None:
+        h, _ = mlstm_chunkwise(q, k, v, ig, fg, chunk=cfg.chunk_size,
+                               unroll=cfg.unroll_scans)
+        new_cache = None
+    else:
+        st = (cache["C"], cache["n"], cache["m"])
+        if S == 1:
+            st, h1 = mlstm_step(st, (q[:, 0], k[:, 0], v[:, 0],
+                                     ig[:, 0], fg[:, 0]))
+            h = h1[:, None]
+        else:
+            h, st = mlstm_chunkwise(q, k, v, ig, fg, carry=st,
+                                    chunk=cfg.chunk_size,
+                                    unroll=cfg.unroll_scans)
+        new_cache = {"C": st[0], "n": st[1], "m": st[2], "conv": new_buf}
+    h = norm_apply(p, h.astype(cfg.cdtype), "rms", cfg.norm_eps, "hnorm")
+    di = H * (h.shape[-1])
+    out = h.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32)
+                                            ).astype(cfg.cdtype)
+    return linear(p, "wo", out, cfg.mac, cfg.cdtype), new_cache
+
+
+# --------------------------------- sLSTM -----------------------------------
+
+def slstm_init(key, cfg) -> dict:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    p = {}
+    p.update(linear_init(ks[0], d, 4 * d, "wi", cfg.mac, False, cfg.pdtype))
+    p["rec"] = (jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32)
+                / np.sqrt(dh)).astype(cfg.pdtype)
+    p["bias"] = jnp.concatenate([
+        jnp.full((d,), -3.0), jnp.linspace(3.0, 6.0, d),
+        jnp.zeros((2 * d,))]).astype(jnp.float32)
+    p.update(norm_init(d, "rms", cfg.pdtype, "hnorm"))
+    ff = int(4 * d / 3)
+    p.update(linear_init(ks[2], d, 2 * ff, "wup", cfg.mac, False, cfg.pdtype))
+    p.update(linear_init(ks[3], ff, d, "wo", cfg.mac, False, cfg.pdtype))
+    return p
+
+
+def slstm_apply(p: dict, x: jnp.ndarray, cfg, *, cache=None) -> tuple:
+    """Sequential sLSTM over S, then gated post-up-projection FFN."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    zs = linear(p, "wi", x, cfg.mac, cfg.cdtype)       # (B,S,4d)
+    rec = p["rec"].astype(jnp.float32)
+
+    if cache is None:
+        st = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+              jnp.full((B, d), -1e30, jnp.float32),
+              jnp.zeros((B, d), jnp.float32))
+    else:
+        st = (cache["h"], cache["c"], cache["m"], cache["n"])
+
+    def step(st, z_t):
+        h, c, m, n = st
+        hh = h.reshape(B, H, dh)
+        r = jnp.einsum("ghde,bhd->gbhe", rec, hh).reshape(4, B, d)
+        z4 = z_t.astype(jnp.float32).reshape(B, 4, d).transpose(1, 0, 2)
+        pre = z4 + r + p["bias"].reshape(4, d)[:, None]
+        ig, fg, zg, og = pre[0], pre[1], pre[2], pre[3]
+        fg = jax.nn.log_sigmoid(fg)
+        m_new = jnp.maximum(fg + m, ig)
+        i_ = jnp.exp(ig - m_new)
+        f_ = jnp.exp(fg + m - m_new)
+        c = f_ * c + i_ * jnp.tanh(zg)
+        n = f_ * n + i_
+        h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1e-6)
+        return (h, c, m_new, n), h
+
+    zs_t = zs.swapaxes(0, 1)                           # (S,B,4d)
+    st, hs = jax.lax.scan(step, st, zs_t)
+    h = hs.swapaxes(0, 1).astype(cfg.cdtype)           # (B,S,d)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": st[0], "c": st[1], "m": st[2], "n": st[3]}
+    h = norm_apply(p, h, "rms", cfg.norm_eps, "hnorm")
+    up = linear(p, "wup", h, cfg.mac, cfg.cdtype)
+    a, b = jnp.split(up, 2, axis=-1)
+    return linear(p, "wo", act_fn("gelu")(a) * b, cfg.mac, cfg.cdtype), \
+        new_cache
+
+
+def init_mlstm_cache(cfg, batch: int, n_layers: int):
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dh = di // H
+    return {
+        "C": jnp.zeros((n_layers, batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((n_layers, batch, H, dh), jnp.float32),
+        "m": jnp.full((n_layers, batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, 3, di), cfg.cdtype),
+    }
+
+
+def init_slstm_cache(cfg, batch: int, n_layers: int):
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((n_layers, batch, d), jnp.float32),
+        "c": jnp.zeros((n_layers, batch, d), jnp.float32),
+        "m": jnp.full((n_layers, batch, d), -1e30, jnp.float32),
+        "n": jnp.zeros((n_layers, batch, d), jnp.float32),
+    }

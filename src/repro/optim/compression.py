@@ -1,0 +1,53 @@
+"""Int8 gradient compression with error feedback (EF-SGD style).
+
+Used for the cross-data-axis gradient all-reduce: each shard quantizes its
+local gradient to int8 with a per-tensor scale, all-reduces the int8 payload
+(8× less DP traffic), dequantizes, and keeps the quantization residual in an
+error-feedback buffer added to the next step's gradient — preserving
+convergence (Karimireddy et al., 2019).
+
+The shard_map DP wrapper lives in parallel/compression (train step flag
+``grad_compress``); these primitives are also exposed for checkpoint-size
+reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jnp.ndarray):
+    """x (float) → (codes int8, scale f32). Symmetric, per-tensor."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def decompress_int8(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, errors):
+    """Apply error feedback then compress each leaf.
+
+    Returns (codes_tree, scales_tree, new_errors_tree)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        c, s = compress_int8(corrected)
+        back = decompress_int8(c, s)
+        return c, s, corrected - back
+
+    out = jax.tree_util.tree_map(one, grads, errors)
+    codes = jax.tree_util.tree_map(lambda o: o[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    errs = jax.tree_util.tree_map(lambda o: o[2], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return codes, scales, errs
+
+
+def init_error_buffers(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

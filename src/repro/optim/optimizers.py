@@ -1,0 +1,129 @@
+"""Optimizers (functional, optax-like): AdamW, Adafactor, SGD-momentum.
+
+Adafactor (factored second moments, no momentum) is the default for the
+≥200B MoE configs — optimizer state is O(rows+cols) per matrix, which is
+what makes the 671B dry-run fit on 256×16 GiB chips (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable      # (grads, state, params, lr) -> (new_params, state)
+
+
+def _tree_map(f, *ts, **kw):
+    return jax.tree_util.tree_map(f, *ts, **kw)
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        zeros = _tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": zeros,
+                "v": _tree_map(lambda p: jnp.zeros_like(p, jnp.float32),
+                               params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        b1t = 1 - b1 ** t.astype(jnp.float32)
+        b2t = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            step = (m2 / b1t) / (jnp.sqrt(v2 / b2t) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+        out = _tree_map(upd, grads, state["m"], state["v"], params)
+        new_p = _tree_map(lambda o: o[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        m = _tree_map(lambda o: o[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        v = _tree_map(lambda o: o[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adafactor(eps=1e-30, clip_thresh=1.0, decay=0.8) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern, 2018), no momentum."""
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        leaves = jax.tree_util.tree_leaves(params)
+        fs = []
+        for p in leaves:
+            if _factored(p):
+                fs.append({"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                           "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                           jnp.float32)})
+            else:
+                fs.append({"v": jnp.zeros_like(p, jnp.float32)})
+        return {"f": tuple(fs), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** (-decay)
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        p_leaves = treedef.flatten_up_to(params)
+
+        new_p, fs = [], []
+        for g, s, p in zip(g_leaves, state["f"], p_leaves):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                       eps))
+                step = g * jax.lax.rsqrt(denom + eps)
+                fs.append({"vr": vr, "vc": vc})
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                step = g * jax.lax.rsqrt(v + eps)
+                fs.append({"v": v})
+            # update clipping (RMS ≤ clip_thresh)
+            rms = jnp.sqrt(jnp.mean(step * step) + eps)
+            step = step / jnp.maximum(1.0, rms / clip_thresh)
+            new_p.append((p.astype(jnp.float32) - lr * step).astype(p.dtype))
+
+        return (jax.tree_util.tree_unflatten(treedef, new_p),
+                {"f": tuple(fs), "t": t})
+
+    return Optimizer(init, update)
+
+
+def sgd(momentum=0.9) -> Optimizer:
+    def init(params):
+        return {"m": _tree_map(lambda p: jnp.zeros_like(p, jnp.float32),
+                               params)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            m2 = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m2).astype(p.dtype), m2
+        out = _tree_map(upd, grads, state["m"], params)
+        new_p = _tree_map(lambda o: o[0], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+        m = _tree_map(lambda o: o[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgd": sgd}[name]()

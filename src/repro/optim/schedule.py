@@ -1,0 +1,15 @@
+"""LR schedules."""
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

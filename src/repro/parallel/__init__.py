@@ -1,0 +1,2 @@
+from .sharding import (MeshCtx, set_mesh, get_mesh, constrain, AXIS_BATCH,
+                       AXIS_MODEL, AXIS_EXPERT, param_specs, batch_spec)

@@ -1,0 +1,203 @@
+"""Sharding rules + mesh context.
+
+Axes convention (production mesh, launch/mesh.py):
+  single-pod: (data=16, model=16); multi-pod: (pod=2, data=16, model=16).
+``pod`` is an outer data axis (batch + FSDP shard over ('pod','data')).
+
+Param sharding is *path-based*: the flattened pytree path of every parameter
+is matched against rules below.  Activations are annotated in model code via
+``constrain`` which no-ops when no mesh is active (single-device tests).
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AXIS_MODEL = "model"
+AXIS_DATA = "data"
+AXIS_POD = "pod"
+AXIS_BATCH = (AXIS_POD, AXIS_DATA)     # logical batch = pod × data
+AXIS_EXPERT = AXIS_MODEL               # experts sharded over the model axis
+
+_ctx = threading.local()
+
+
+class MeshCtx:
+    """Activate a mesh for model-code sharding annotations."""
+
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _ctx.mesh = self.mesh
+        return self.mesh
+
+    def __exit__(self, *a):
+        _ctx.mesh = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> MeshCtx:
+    return MeshCtx(mesh)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mesh", None)
+
+
+def _filter_axes(mesh: Mesh, spec_items):
+    """Drop axis names absent from the mesh (e.g. 'pod' on single-pod)."""
+    names = set(mesh.axis_names)
+
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a in names)
+            return kept if kept else None
+        return e if e in names else None
+
+    return P(*[keep(e) for e in spec_items])
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint if a mesh is active, else identity."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    p = _filter_axes(mesh, spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, p))
+
+
+def batch_spec(mesh: Mesh, shape, batch_axis: int = 0) -> NamedSharding:
+    """Inputs: batch over ('pod','data'), rest replicated.
+
+    ``shape`` may be a tuple (divisibility-checked: batch=1 cells replicate)
+    or an int ndim (assumed divisible)."""
+    if isinstance(shape, int):
+        ndim, dim0 = shape, None
+    else:
+        ndim, dim0 = len(shape), shape[batch_axis]
+    items = [None] * ndim
+    items[batch_axis] = AXIS_BATCH
+    if dim0 is not None:
+        names = [a for a in AXIS_BATCH if a in mesh.axis_names]
+        total = int(np.prod([mesh.shape[a] for a in names])) if names else 1
+        if total and dim0 % total != 0:
+            items[batch_axis] = None
+    return NamedSharding(mesh, _filter_axes(mesh, items))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path regex → PartitionSpec items).
+# Paths look like "layers/attn/wq", "layers/moe/experts_w1", "embed/table"…
+# Rules are checked in order; first match wins.  ``F`` marks the dim that the
+# FSDP axis additionally shards when cfg.fsdp is on (largest remaining dim).
+# ---------------------------------------------------------------------------
+
+_RULES: list[tuple[str, tuple]] = [
+    # embeddings / heads: shard vocab over model
+    (r"embed/table$",        ("model", "fsdp")),
+    (r"lm_head/w$",          ("fsdp", "model")),
+    (r"mtp/.*head/w$",       ("fsdp", "model")),
+    # attention projections: in-dim × (heads*dim) — shard head dim over model
+    (r"(attn|mla)/w(q|k|v|kv|qkv)(_b)?$", ("fsdp", "model")),
+    (r"(attn|mla)/w(q_a|kv_a|kr)$",       ("fsdp", None)),   # low-rank down
+    (r"(attn|mla)/w(q_b|k_b|v_b)$",       (None, "model")),  # low-rank up
+    (r"(attn|mla)/wo$",      ("model", "fsdp")),
+    # dense mlp: d × f sharded over model on f
+    (r"mlp/w(i|g)$",         ("fsdp", "model")),
+    (r"mlp/wo$",             ("model", "fsdp")),
+    # MoE experts: experts over model (EP), dims unsharded (fsdp on d)
+    (r"moe/experts_w(i|g)$", ("model", "fsdp", None)),
+    (r"moe/experts_wo$",     ("model", None, "fsdp")),
+    (r"moe/router/w$",       (None, None)),
+    (r"moe/shared/w(i|g)$",  ("fsdp", "model")),
+    (r"moe/shared/wo$",      ("model", "fsdp")),
+    # ssm / xlstm projections
+    (r"(ssm|mlstm|slstm)/w(in|i|g)$",  ("fsdp", "model")),
+    (r"(ssm|mlstm|slstm)/w(out|o)$",   ("model", "fsdp")),
+    (r"(ssm|mlstm|slstm)/",  None),    # small per-channel params: replicate
+    # norms, biases, scalars: replicated
+    (r"(norm|ln)",           None),
+]
+
+
+def _spec_for_path(path: str, shape: tuple, fsdp: bool) -> P:
+    for pat, items in _RULES:
+        if re.search(pat, path):
+            if items is None:
+                return P()
+            out = []
+            for i, e in enumerate(items[:len(shape)]):
+                if e == "fsdp":
+                    out.append(AXIS_BATCH if fsdp else None)
+                elif e == "model":
+                    out.append(AXIS_MODEL)
+                else:
+                    out.append(None)
+            # pad missing dims with None
+            out += [None] * (len(shape) - len(out))
+            return P(*out)
+    return P()  # default: replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# Stage containers whose params carry a leading stacked-layer dim — sharding
+# rules apply to the per-layer shape, shifted right by one.
+STACKED_STAGES = ("stack", "moe_stack", "dense_prefix", "xlstm", "enc",
+                  "dec")
+
+
+def param_specs(params, mesh: Mesh, fsdp: bool = False):
+    """PartitionSpec pytree (NamedShardings) mirroring ``params``.
+
+    Dims whose size does not divide the assigned mesh axes fall back to
+    replication on that dim (divisibility-safe by construction — configs pad
+    vocab/heads, but e.g. tiny smoke models stay runnable on any mesh).
+    """
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def norm(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            return tuple(a for a in e if a in mesh.axis_names)
+        return e if e in mesh.axis_names else None
+
+    def ok(dim_size, entry):
+        entry = norm(entry)
+        if entry is None:
+            return True
+        names = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([axis_size.get(a, 1) for a in names]))
+        return dim_size % total == 0
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        stacked = pstr.split("/", 1)[0] in STACKED_STAGES
+        shape = leaf.shape[1:] if stacked and leaf.ndim >= 1 else leaf.shape
+        spec = _spec_for_path(pstr, shape, fsdp)
+        items = list(spec)[:len(shape)] + [None] * (len(shape) - len(spec))
+        if stacked:
+            items = [None] + items          # layer-stack dim replicated
+        items = [e if ok(leaf.shape[i], e) else None
+                 for i, e in enumerate(items)]
+        return NamedSharding(mesh, _filter_axes(mesh, items))
+
+    return jax.tree_util.tree_map_with_path(one, params)

@@ -1,0 +1,106 @@
+"""Shardings for auxiliary trees: optimizer states (mirroring param rules,
+incl. Adafactor's factored moments) and decode caches (sequence-sharded over
+the model axis — split-KV decode, DESIGN.md §5)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import AXIS_BATCH, AXIS_MODEL
+
+# ---------------------------------------------------------------------------
+# sharding of aux trees (optimizer state, caches)
+# ---------------------------------------------------------------------------
+
+def _axes_ok(mesh, dim, entry):
+    if entry is None:
+        return True
+    names = entry if isinstance(entry, tuple) else (entry,)
+    tot = int(np.prod([dict(zip(mesh.axis_names,
+                                mesh.devices.shape)).get(a, 1)
+                       for a in names]))
+    return dim % tot == 0
+
+
+def _filt(mesh, items, shape):
+    out = []
+    for i, e in enumerate(items[:len(shape)]):
+        if e is not None and isinstance(e, tuple):
+            e = tuple(a for a in e if a in mesh.axis_names) or None
+        elif e is not None and e not in mesh.axis_names:
+            e = None
+        out.append(e if e is not None and _axes_ok(mesh, shape[i], e)
+                   else None)
+    out += [None] * (len(shape) - len(out))
+    return NamedSharding(mesh, P(*out))
+
+
+def opt_state_specs(state_abs, params_sh, mesh):
+    """Shardings for a train state: params per rules; m/v mirror params;
+    adafactor factored vr/vc inherit the matching params dims; scalars
+    replicated."""
+    rep = NamedSharding(mesh, P())
+
+    def like_params(tree):
+        flat_p, treedef = jax.tree_util.tree_flatten(params_sh)
+        flat_t = treedef.flatten_up_to(tree)
+        return jax.tree_util.tree_unflatten(treedef, [
+            p for p, _ in zip(flat_p, flat_t)])
+
+    out = {"step": rep, "params": params_sh}
+    opt = state_abs["opt"]
+    if "m" in opt:                       # adamw
+        out["opt"] = {"m": like_params(opt["m"]),
+                      "v": like_params(opt["v"]), "t": rep}
+    elif "f" in opt:                     # adafactor
+        p_leaves = jax.tree_util.tree_leaves(params_sh)
+        fs = []
+        for sh, st in zip(p_leaves, opt["f"]):
+            spec = list(sh.spec) + [None] * 8
+            if "vr" in st:
+                fs.append({"vr": NamedSharding(
+                    mesh, P(*spec[:len(st["vr"].shape)])),
+                    "vc": NamedSharding(mesh, P(*(
+                        spec[:len(st["vc"].shape) - 1]
+                        + [spec[len(st["vr"].shape)]])))})
+            else:
+                fs.append({"v": sh})
+        out["opt"] = {"f": tuple(fs), "t": rep}
+    else:                                # sgd
+        out["opt"] = {"m": like_params(opt["m"])}
+    if "err" in state_abs:
+        out["err"] = like_params(state_abs["err"])
+    return out
+
+
+_CACHE_RULES = {
+    "k":    (None, AXIS_BATCH, AXIS_MODEL, None, None),
+    "v":    (None, AXIS_BATCH, AXIS_MODEL, None, None),
+    "ck":   (None, AXIS_BATCH, AXIS_MODEL, None, None),
+    "cv":   (None, AXIS_BATCH, AXIS_MODEL, None, None),
+    "ckv":  (None, AXIS_BATCH, AXIS_MODEL, None),
+    "kr":   (None, AXIS_BATCH, AXIS_MODEL, None),
+    "h":    (None, AXIS_BATCH, AXIS_MODEL, None),
+    "conv": (None, AXIS_BATCH, None, AXIS_MODEL),
+    "C":    (None, AXIS_BATCH, None, None, AXIS_MODEL),
+    "n":    (None, AXIS_BATCH, None, None),
+    "m":    (None, AXIS_BATCH, None),
+    "c":    (None, AXIS_BATCH, AXIS_MODEL),
+    "pos":  (),
+}
+
+
+def cache_specs(cache_abs, mesh):
+    def one(path, leaf):
+        name = None
+        for pp in reversed(path):
+            if hasattr(pp, "key"):
+                name = str(pp.key)
+                break
+        items = _CACHE_RULES.get(name, ())
+        return _filt(mesh, list(items), leaf.shape)
+    return jax.tree_util.tree_map_with_path(one, cache_abs)
+
+

@@ -1,0 +1,3 @@
+from .uniform import (quantize_codes, dequantize, fake_quant, calibrate_scale,
+                      uniform_levels)
+from .nonuniform import kmeans_levels, nonuniform_codes, map_levels_to_int8

@@ -1,0 +1,48 @@
+"""4-bit non-uniform quantization (DKM-style k-means codebooks) — paper §4.
+
+Levels are learned per-tensor by (weighted) Lloyd iterations; for execution on
+the general-purpose encoded MAC array they are mapped to the nearest 8-bit
+uniform levels (paper: "non-uniform levels are first converted to the closest
+levels in 8-bit uniform quantization").  For the *task-specific* array
+(Fig 7), the raw level products feed the encoding search directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .uniform import qmax
+
+
+def kmeans_levels(x: jnp.ndarray, bits: int = 4, iters: int = 25,
+                  seed: int = 0) -> jnp.ndarray:
+    """1-D k-means (2^bits centroids) over tensor values. Returns sorted levels."""
+    k = 1 << bits
+    flat = x.reshape(-1).astype(jnp.float32)
+    lo, hi = jnp.min(flat), jnp.max(flat)
+    centers = lo + (hi - lo) * (jnp.arange(k, dtype=jnp.float32) + 0.5) / k
+
+    def step(centers, _):
+        d = jnp.abs(flat[None, :] - centers[:, None])        # (k, n)
+        assign = jnp.argmin(d, axis=0)                        # (n,)
+        one = jax.nn.one_hot(assign, k, dtype=jnp.float32)    # (n, k)
+        cnt = one.sum(axis=0)
+        tot = one.T @ flat
+        new = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1.0), centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(step, centers, None, length=iters)
+    return jnp.sort(centers)
+
+
+def nonuniform_codes(x: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-level code assignment. Returns int8 codes in [0, len(levels))."""
+    d = jnp.abs(x[..., None] - levels)
+    return jnp.argmin(d, axis=-1).astype(jnp.int8)
+
+
+def map_levels_to_int8(levels: jnp.ndarray, scale: jnp.ndarray, bits: int = 8
+                       ) -> jnp.ndarray:
+    """Snap non-uniform levels to the nearest 8-bit uniform codes (paper §4)."""
+    m = qmax(bits)
+    return jnp.clip(jnp.round(levels / scale), -m, m).astype(jnp.int8)

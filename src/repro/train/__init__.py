@@ -1,0 +1,2 @@
+from .trainer import make_train_step, init_train_state, TrainState
+from .losses import lm_loss

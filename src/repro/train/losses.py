@@ -1,0 +1,18 @@
+"""Losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            mask=None) -> jnp.ndarray:
+    """Token-level cross entropy. logits (B,S,V) (possibly padded vocab),
+    labels (B,S) < true vocab."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

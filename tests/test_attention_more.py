@@ -1,0 +1,100 @@
+"""Attention: chunked==dense, sliding window, softcap, GQA padding
+equivalence, causality property (hypothesis)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn.attention import mha, kv_of_q_map
+
+
+def _qkv(seed, B=2, S=32, Hq=4, Hkv=2, D=16):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
+    return q, k, v
+
+
+def test_chunked_equals_dense():
+    q, k, v = _qkv(0)
+    kvm = kv_of_q_map(4, 2, 4, 2)
+    pos = jnp.arange(32)
+    a = mha(q, k, v, kvm, scale=0.25, q_pos=pos, k_pos=pos, chunk=8)
+    b = mha(q, k, v, kvm, scale=0.25, q_pos=pos, k_pos=pos, chunk=0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+    c = mha(q, k, v, kvm, scale=0.25, q_pos=pos, k_pos=pos, chunk=8,
+            unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_masks_past():
+    q, k, v = _qkv(1)
+    kvm = kv_of_q_map(4, 2, 4, 2)
+    pos = jnp.arange(32)
+    w = mha(q, k, v, kvm, scale=0.25, q_pos=pos, k_pos=pos, window=4)
+    # perturb tokens far outside the window of the last query: no effect
+    k2 = k.at[:, :8].set(jnp.asarray(
+        np.random.default_rng(9).normal(size=k[:, :8].shape), jnp.float32))
+    w2 = mha(q, k2, v, kvm, scale=0.25, q_pos=pos, k_pos=pos, window=4)
+    np.testing.assert_allclose(np.asarray(w[:, -1]), np.asarray(w2[:, -1]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_softcap_bounds_logit_effect():
+    q, k, v = _qkv(2)
+    kvm = kv_of_q_map(4, 2, 4, 2)
+    pos = jnp.arange(32)
+    a = mha(q * 100.0, k, v, kvm, scale=1.0, q_pos=pos, k_pos=pos, cap=5.0)
+    assert np.all(np.isfinite(np.asarray(a)))
+
+
+def test_head_padding_equivalence():
+    """Padded-head attention (zeroed padded wo rows) == unpadded module."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.nn.attention import attn_init, attn_apply
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, n_heads=3, n_kv_heads=3, qkv_bias=False)
+    cfgp = dataclasses.replace(cfg, pad_heads_to=4)
+    key = jax.random.PRNGKey(0)
+    p = attn_init(key, cfg)
+    pp = attn_init(key, cfgp)
+    hd = cfg.head_dim_r
+    # copy logical weights into the padded module
+    for nm in ("wq", "wk", "wv"):
+        w = np.zeros(pp[nm].shape, np.float32)
+        w[:, :cfg.n_heads * hd] = np.asarray(p[nm])
+        pp[nm] = jnp.asarray(w)
+    wo = np.zeros(pp["wo"].shape, np.float32)
+    wo[:cfg.n_heads * hd] = np.asarray(p["wo"])
+    pp["wo"] = jnp.asarray(wo)
+
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, 16, 128)),
+                    jnp.float32)
+    a, _ = attn_apply(p, x, cfg)
+    b, _ = attn_apply(pp, x, cfgp)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 3))
+def test_causality_property(seed, pert_pos):
+    """Output at position i is independent of tokens at positions > i."""
+    q, k, v = _qkv(seed % 100, S=8)
+    kvm = kv_of_q_map(4, 2, 4, 2)
+    pos = jnp.arange(8)
+    base = mha(q, k, v, kvm, scale=0.25, q_pos=pos, k_pos=pos)
+    cut = 8 - pert_pos
+    rng = np.random.default_rng(seed)
+    k2 = k.at[:, cut:].add(jnp.asarray(rng.normal(size=k[:, cut:].shape),
+                                       jnp.float32))
+    v2 = v.at[:, cut:].add(1.0)
+    out = mha(q, k2, v2, kvm, scale=0.25, q_pos=pos, k_pos=pos)
+    np.testing.assert_allclose(np.asarray(out[:, :cut]),
+                               np.asarray(base[:, :cut]),
+                               rtol=1e-5, atol=1e-5)

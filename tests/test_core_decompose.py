@@ -1,0 +1,119 @@
+"""Bitplane decomposition == LUT oracle (bit-exact), gradients, QAT op."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gates as G
+from repro.core.circuits import Circuit, sample_circuits, paper_fig2_circuit
+from repro.core.encoding import fit_circuit
+from repro.core.decompose import decompose
+from repro.core.mac import EncodedMac, lut_matmul, encoded_matmul_qat
+from repro.quant.uniform import calibrate_scale, quantize_codes
+
+
+def _rand_spec(seed, m_bits=16, bits=4):
+    rng = np.random.default_rng(seed)
+    gt, ii = sample_circuits(rng, 1, m_bits, bits, bits)
+    return fit_circuit(Circuit(gt[0], ii[0], bits, bits))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_decompose_matches_lut_truthtable(seed):
+    """Σ_j s_j b_j(a,w) from the polynomial decomposition == LUT, all rows."""
+    spec = _rand_spec(seed)
+    prog = decompose(spec.circuit)
+    ta = 1 << spec.circuit.bits_a
+    tb = 1 << spec.circuit.bits_b
+    a_codes = jnp.arange(ta, dtype=jnp.int32)[:, None]        # (ta, 1)
+    w_codes = jnp.arange(tb, dtype=jnp.int32)[None, :]        # (1, tb)
+    # apply over (ta,1)x(1,tb) computes lut[a,w] entrywise
+    got = prog.apply_f32(a_codes, w_codes, jnp.asarray(spec.s))
+    want = np.asarray(spec.lut())
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("seed,m,k,n", [(0, 5, 7, 3), (1, 8, 16, 8),
+                                        (2, 3, 33, 9)])
+def test_bitplane_matmul_equals_lut_matmul(seed, m, k, n):
+    spec = _rand_spec(seed)
+    prog = decompose(spec.circuit)
+    rng = np.random.default_rng(seed + 10)
+    x = jnp.asarray(rng.integers(-8, 8, (m, k)), jnp.int8)
+    w = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8)
+    got = prog.apply_f32(x, w, jnp.asarray(spec.s))
+    want = lut_matmul(x, w, spec.lut(), 4, 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_fig2_decomposition_exact_product():
+    circ, s = paper_fig2_circuit()
+    prog = decompose(circ)
+    x = jnp.asarray([[-2, -1, 0, 1]], jnp.int8).T          # (4,1)
+    w = jnp.asarray([[-2, -1, 0, 1]], jnp.int8)            # (1,4)
+    got = prog.apply_f32(x, w, jnp.asarray(s))
+    want = np.arange(-2, 2)[:, None] * np.arange(-2, 2)[None, :]
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+def test_position_weight_gradients_exact():
+    """out is linear in s ⇒ autodiff grad == B-accumulation, check vs FD."""
+    spec = _rand_spec(5)
+    prog = decompose(spec.circuit)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-8, 8, (4, 6)), jnp.int8)
+    w = jnp.asarray(rng.integers(-8, 8, (6, 3)), jnp.int8)
+
+    def loss(s):
+        return jnp.sum(prog.apply_f32(x, w, s) ** 2)
+
+    s0 = jnp.asarray(spec.s)
+    g = jax.grad(loss)(s0)
+    # directional finite difference
+    v = jnp.asarray(np.random.default_rng(1).normal(size=s0.shape),
+                    jnp.float32)
+    eps = 1e-3
+    fd = (loss(s0 + eps * v) - loss(s0 - eps * v)) / (2 * eps)
+    np.testing.assert_allclose(float(jnp.vdot(g, v)), float(fd),
+                               rtol=1e-3, atol=1e-1)
+
+
+def test_qat_op_value_and_ste_grads():
+    mac = EncodedMac.from_spec(_rand_spec(7))
+    prog = mac.program
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    sx = calibrate_scale(x, 4)
+    sw = calibrate_scale(w, 4)
+    s = jnp.asarray(mac.s_init)
+
+    out = encoded_matmul_qat(x, w, sx, sw, s, prog, bits=4)
+    # forward equals the quantized encoded product
+    xc, wc = quantize_codes(x, sx, 4), quantize_codes(w, sw, 4)
+    want = prog.apply_f32(xc, wc, s) * (sx * sw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+    # STE: grads wrt x equal the exact-matmul grads
+    gx = jax.grad(lambda x_: jnp.sum(
+        encoded_matmul_qat(x_, w, sx, sw, s, prog, bits=4)))(x)
+    np.testing.assert_allclose(np.asarray(gx),
+                               np.asarray(w.sum(axis=1) * jnp.ones_like(x)),
+                               rtol=1e-5, atol=1e-5)
+    # grads wrt s are nonzero (trainable position weights)
+    gs = jax.grad(lambda s_: jnp.sum(
+        encoded_matmul_qat(x, w, sx, sw, s_, prog, bits=4)))(s)
+    assert float(jnp.abs(gs).sum()) > 0
+
+
+def test_default_artifact_roundtrip(tmp_path, monkeypatch):
+    import repro.core.mac as mac_mod
+    monkeypatch.setattr(mac_mod, "_ARTIFACT_DIR", str(tmp_path))
+    spec = _rand_spec(9)
+    mac_mod.EncodedMac.save(spec, "t")
+    loaded = mac_mod.EncodedMac.load("t")
+    np.testing.assert_allclose(loaded.spec.s, spec.s, rtol=1e-6)
+    np.testing.assert_array_equal(loaded.spec.circuit.gate_types,
+                                  spec.circuit.gate_types)

@@ -1,0 +1,102 @@
+"""Core encoding library: gates, truth tables, least-squares fits, search."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import gates as G
+from repro.core.circuits import Circuit, sample_circuits, paper_fig2_circuit
+from repro.core.encoding import (fit_circuit, fit_position_weights, rmse_of,
+                                 truth_table_bits)
+from repro.core.search import random_search, anneal, binary_search_width
+
+
+def test_gate_semantics_exhaustive():
+    # 3 input bits, every combination, every gate type
+    bits = jnp.asarray(G.operand_bit_table(2, 1))          # (8, 3)
+    gt = jnp.arange(8, dtype=jnp.int32)
+    ii = jnp.asarray(np.tile(np.array([[0, 1, 2]], np.int32), (8, 1)))
+    out = np.asarray(G.eval_gates(gt, ii, bits))
+    b = np.asarray(bits, np.int32)
+    x0, x1, x2 = b[:, 0], b[:, 1], b[:, 2]
+    np.testing.assert_array_equal(out[:, G.SET], 1)
+    np.testing.assert_array_equal(out[:, G.IN], x0)
+    np.testing.assert_array_equal(out[:, G.NOT], 1 - x0)
+    np.testing.assert_array_equal(out[:, G.AND2], x0 & x1)
+    np.testing.assert_array_equal(out[:, G.OR2], x0 | x1)
+    np.testing.assert_array_equal(out[:, G.NAND2], 1 - (x0 & x1))
+    np.testing.assert_array_equal(out[:, G.NAND3], 1 - (x0 & x1 & x2))
+    np.testing.assert_array_equal(out[:, G.XOR3], x0 ^ x1 ^ x2)
+
+
+def test_signed_products_8bit():
+    v = G.signed_products(8, 8).reshape(256, 256)
+    assert v[0, 0] == 0
+    # row/col codes are raw two's complement: code 255 == -1, 127 == 127
+    assert v[255, 255] == 1
+    assert v[128, 128] == 128 * 128
+    assert v[127, 255] == -127
+
+
+def test_fig2_circuit_exact():
+    circ, s = paper_fig2_circuit()
+    assert rmse_of(circ, s) < 1e-6          # hand wiring is exact for 2-bit
+    spec = fit_circuit(circ)                # lstsq should also find ~exact fit
+    assert spec.rmse < 5e-3                 # (ridge damping leaves ~5e-4)
+
+
+def test_lstsq_matches_numpy():
+    rng = np.random.default_rng(0)
+    gt, ii = sample_circuits(rng, 4, 24, 4, 4)
+    vals = G.signed_products(4, 4)
+    s, rmse = fit_position_weights(gt, ii, vals, 4, 4)
+    for i in range(4):
+        circ = Circuit(gt[i], ii[i], 4, 4)
+        B = np.asarray(truth_table_bits(circ), np.float64)
+        s_np, *_ = np.linalg.lstsq(B, vals, rcond=None)
+        rmse_np = np.sqrt(np.mean((B @ s_np - vals) ** 2))
+        assert rmse[i] <= rmse_np + 1e-2 * (1 + rmse_np)
+        assert abs(rmse_of(circ, s[i]) - rmse[i]) < 1e-2 * (1 + rmse[i])
+
+
+def test_random_search_improves_and_traces():
+    res = random_search(seed=0, m_bits=24, n_samples=96, bits_a=4, bits_b=4,
+                        batch=32)
+    assert res.n_samples == 96
+    t = res.rmse_trace
+    assert len(t) == 96
+    assert np.all(np.diff(t) <= 1e-9)       # best-so-far is monotone
+    assert t[-1] < t[0]                      # search actually improved
+
+
+def test_anneal_refines():
+    res = random_search(seed=1, m_bits=24, n_samples=64, bits_a=4, bits_b=4)
+    ref = anneal(res.spec, seed=2, iters=96, batch=32)
+    assert ref.spec.rmse <= res.spec.rmse + 1e-6
+    assert rmse_of(ref.spec.circuit, ref.spec.s) == pytest.approx(
+        ref.spec.rmse, rel=1e-3, abs=1e-3)
+
+
+def test_binary_search_width_converges():
+    spec, hist = binary_search_width(seed=0, target_rmse=3.0, lo=8, hi=32,
+                                     n_samples=48, bits_a=4, bits_b=4)
+    widths = [h["width"] for h in hist]
+    assert len(set(widths)) == len(widths)   # strictly shrinking interval
+    assert spec.m_bits <= 32
+    # wider widths searched must bracket the returned one
+    assert all(8 <= w <= 32 for w in widths)
+
+
+def test_wider_is_no_worse_on_average():
+    r16 = random_search(seed=3, m_bits=12, n_samples=64, bits_a=4, bits_b=4)
+    r48 = random_search(seed=3, m_bits=40, n_samples=64, bits_a=4, bits_b=4)
+    assert r48.spec.rmse < r16.spec.rmse     # Fig 6(a) trend
+
+
+def test_nonuniform_value_table_search():
+    # task-specific path (Fig 7): arbitrary level products as targets
+    levels = np.array([-2.3, -1.1, -0.4, 0.0, 0.2, 0.9, 1.7, 3.1], np.float32)
+    vals = G.level_products(levels, levels)
+    res = random_search(seed=0, m_bits=20, n_samples=64, bits_a=3, bits_b=3,
+                        values=vals)
+    assert res.spec.rmse < np.sqrt(np.mean(vals ** 2))  # beats zero predictor

@@ -1,0 +1,45 @@
+"""Hardware cost model vs paper Table 1 + dataflow latency claims."""
+import numpy as np
+import pytest
+
+from repro.hw import (table1, mac_array_cost, simulate_latency,
+                      latency_traditional, latency_encoded)
+from repro.hw.systolic import throughput
+
+
+def test_table1_within_calibration_tolerance():
+    rows = table1()
+    for r in rows:
+        assert abs(r["area_red"] - r["paper_area_red"]) < 0.05, r
+        assert abs(r["power_red"] - r["paper_power_red"]) < 0.05, r
+
+
+def test_reduction_grows_with_array_size():
+    rows = table1(sizes=[32, 64, 128, 256, 512])
+    areds = [r["area_red"] for r in rows]
+    preds = [r["power_red"] for r in rows]
+    assert all(b > a for a, b in zip(areds, areds[1:]))
+    assert all(b > a for a, b in zip(preds, preds[1:]))
+
+
+def test_encoded_cost_scales_with_width():
+    a31 = mac_array_cost(256, 31)["area_mm2"]
+    a48 = mac_array_cost(256, 48)["area_mm2"]
+    a64 = mac_array_cost(256, 64)["area_mm2"]
+    assert a31 < a48 < a64
+
+
+@pytest.mark.parametrize("n", [4, 32, 256])
+@pytest.mark.parametrize("m", [1, 2, 7])
+def test_latency_formulas(n, m):
+    assert simulate_latency(n, m, "trad") == latency_traditional(n, m)
+    assert simulate_latency(n, m, "prop") == latency_encoded(n, m)
+    assert latency_encoded(n, m) < latency_traditional(n, m)
+
+
+def test_throughput_converges_at_large_m():
+    # paper §3.3: throughputs become nearly the same as m grows
+    r_small = throughput(64, 1, "prop") / throughput(64, 1, "trad")
+    r_big = throughput(64, 512, "prop") / throughput(64, 512, "trad")
+    assert r_small > 1.4
+    assert abs(r_big - 1.0) < 0.01

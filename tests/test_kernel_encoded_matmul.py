@@ -1,0 +1,69 @@
+"""Pallas encoded-matmul kernel vs ref.py oracle — shape/dtype sweep,
+interpret mode (CPU executes the kernel body)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.circuits import Circuit, sample_circuits
+from repro.core.encoding import fit_circuit
+from repro.core.decompose import decompose
+from repro.core.mac import lut_matmul
+from repro.kernels.ref import encoded_matmul_ref, planes_ref
+from repro.kernels.ops import encoded_matmul
+
+
+def _folded(seed=0, bits=4, m_bits=16, k=32, n=16):
+    rng = np.random.default_rng(seed)
+    gt, ii = sample_circuits(rng, 1, m_bits, bits, bits)
+    spec = fit_circuit(Circuit(gt[0], ii[0], bits, bits))
+    prog = decompose(spec.circuit)
+    w = jnp.asarray(rng.integers(-8, 8, (k, n)), jnp.int8)
+    Wt, bias = prog.fold_weights(w, jnp.asarray(spec.s))
+    return prog, spec, w, Wt, bias
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 32, 16), (128, 128, 128),
+                                   (100, 130, 70), (1, 256, 128)])
+def test_kernel_matches_ref(m, k, n):
+    prog, spec, w, Wt, bias = _folded(k=k, n=n)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-8, 8, (m, k)), jnp.int8)
+    want = encoded_matmul_ref(x, Wt, bias, prog.a_mono_bits)
+    got = encoded_matmul(x, Wt, bias, prog.a_mono_bits,
+                         backend="pallas_interpret", bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)  # bf16 planes/weights
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_kernel_end_to_end_vs_lut(seed):
+    """Kernel with folded weights == paper's LUT definition of the MAC."""
+    prog, spec, w, Wt, bias = _folded(seed=seed, k=64, n=32)
+    rng = np.random.default_rng(seed + 5)
+    x = jnp.asarray(rng.integers(-8, 8, (16, 64)), jnp.int8)
+    got = encoded_matmul(x, Wt, bias, prog.a_mono_bits,
+                         backend="pallas_interpret", bm=16, bn=32, bk=32)
+    want = np.asarray(lut_matmul(x, w, spec.lut(), 4, 4))
+    # bf16 plane/weight rounding: tolerance scales with output magnitude
+    atol = 2e-2 * np.abs(want).max()
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-2, atol=atol)
+
+
+def test_xla_backend_matches_ref():
+    prog, spec, w, Wt, bias = _folded(k=48, n=24)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-8, 8, (12, 48)), jnp.int8)
+    got = encoded_matmul(x, Wt, bias, prog.a_mono_bits, backend="xla")
+    want = encoded_matmul_ref(x, Wt, bias, prog.a_mono_bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_planes_ref_bits():
+    mono = np.array([[0, 0, 0], [1, 1, 1], [0, 1, 1]], np.int32)
+    x = jnp.asarray([[0, 1, 2, 3, -1]], jnp.int8)
+    p = np.asarray(planes_ref(x, mono))[:, 0, :]
+    np.testing.assert_array_equal(p[0], [0, 1, 0, 1, 1])       # bit0
+    np.testing.assert_array_equal(p[1], [0, 0, 1, 1, 1])       # bit1
+    np.testing.assert_array_equal(p[2], [0, 0, 0, 1, 1])       # bit0&bit1

@@ -1,0 +1,33 @@
+"""8-fake-device distributed correctness: DP×TP == single-device, MoE EP,
+split-KV decode, int8-EF compressed all-reduce, pipeline parallelism,
+elastic checkpoint rescale.  Runs in a subprocess so
+xla_force_host_platform_device_count doesn't leak into other tests."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_script.py")
+CHECKS = ["dp_tp_matches_single", "moe_ep_matches_dense",
+          "splitkv_decode_matches", "compressed_allreduce",
+          "pipeline_parallel", "elastic_rescale"]
+
+
+@pytest.fixture(scope="module")
+def multidevice_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, SCRIPT], capture_output=True,
+                       text=True, timeout=1200, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+@pytest.mark.parametrize("check", CHECKS)
+def test_multidevice(multidevice_output, check):
+    assert f"OK {check}" in multidevice_output
+
+
+def test_all_passed(multidevice_output):
+    assert "ALL_MULTIDEVICE_OK" in multidevice_output

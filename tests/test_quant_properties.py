@@ -1,0 +1,76 @@
+"""Quantization + encoding invariants (hypothesis property tests)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.uniform import (quantize_codes, dequantize, fake_quant,
+                                 calibrate_scale, qmax)
+from repro.quant.nonuniform import kmeans_levels, nonuniform_codes
+from repro.core.circuits import Circuit, sample_circuits
+from repro.core.encoding import fit_circuit, rmse_of
+from repro.core.decompose import decompose
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from([4, 8]))
+def test_quant_roundtrip_error_bounded(seed, bits):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.1, 10),
+                    jnp.float32)
+    s = calibrate_scale(x, bits)
+    err = jnp.abs(dequantize(quantize_codes(x, s, bits), s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_fake_quant_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+    s = calibrate_scale(x, 8)
+    y = fake_quant(x, s, 8)
+    z = fake_quant(y, s, 8)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(z), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_kmeans_levels_cover_range(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    lv = kmeans_levels(x, bits=3, iters=10)
+    assert lv.shape == (8,)
+    assert float(lv.min()) >= float(x.min()) - 1e-5
+    assert float(lv.max()) <= float(x.max()) + 1e-5
+    codes = nonuniform_codes(x, lv)
+    assert int(codes.min()) >= 0 and int(codes.max()) < 8
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10 ** 6), st.floats(0.1, 10.0))
+def test_encoding_linear_in_s(seed, alpha):
+    """Represented value Σ s_j b_j is linear in s ⇒ scaling s scales values."""
+    rng = np.random.default_rng(seed)
+    gt, ii = sample_circuits(rng, 1, 12, 3, 3)
+    circ = Circuit(gt[0], ii[0], 3, 3)
+    spec = fit_circuit(circ)
+    lut1 = np.asarray(spec.lut())
+    lut2 = np.asarray(spec.lut(jnp.asarray(spec.s) * alpha))
+    np.testing.assert_allclose(lut2, lut1 * alpha, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_decompose_consistent_random_circuits(seed):
+    """Bitplane decomposition == LUT for arbitrary random circuits."""
+    rng = np.random.default_rng(seed)
+    gt, ii = sample_circuits(rng, 1, 10, 3, 3)
+    circ = Circuit(gt[0], ii[0], 3, 3)
+    spec = fit_circuit(circ)
+    prog = decompose(circ)
+    a = jnp.arange(8, dtype=jnp.int32)[:, None]
+    w = jnp.arange(8, dtype=jnp.int32)[None, :]
+    got = np.asarray(prog.apply_f32(a, w, jnp.asarray(spec.s)))
+    want = np.asarray(spec.lut())
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,97 @@
+"""Recurrent substrates: mLSTM chunkwise == exact step recurrence; SSM
+chunked scan == stepwise; decode caches match prefill."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.nn.xlstm import mlstm_chunkwise, mlstm_step
+from repro.nn import ssm as S
+
+
+def _rand_qkvif(seed, B=2, T=64, H=2, dh=16):
+    rng = np.random.default_rng(seed)
+    q, k, v = (jnp.asarray(rng.normal(size=(B, T, H, dh)), jnp.float32)
+               for _ in range(3))
+    ig = jnp.asarray(rng.normal(size=(B, T, H)) - 1.0, jnp.float32)
+    fg = jnp.asarray(np.log(1 / (1 + np.exp(-rng.normal(
+        size=(B, T, H)) - 3.0))), jnp.float32)      # log-sigmoid-ish
+    return q, k, v, ig, fg
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_mlstm_chunkwise_matches_step(chunk):
+    q, k, v, ig, fg = _rand_qkvif(0)
+    h_c, carry_c = mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+
+    B, T, H, dh = q.shape
+    st = (jnp.zeros((B, H, dh, dh)), jnp.zeros((B, H, dh)),
+          jnp.full((B, H), -1e30))
+    hs = []
+    for t in range(T):
+        st, h = mlstm_step(st, (q[:, t], k[:, t], v[:, t], ig[:, t],
+                                fg[:, t]))
+        hs.append(h)
+    h_s = jnp.stack(hs, 1)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_s),
+                               rtol=2e-4, atol=2e-4)
+    # final states agree too (decode can continue from a chunked prefill)
+    np.testing.assert_allclose(np.asarray(carry_c[0]), np.asarray(st[0]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(carry_c[2]), np.asarray(st[2]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_chunkwise_carry_composes():
+    q, k, v, ig, fg = _rand_qkvif(1, T=64)
+    h_full, carry = mlstm_chunkwise(q, k, v, ig, fg, chunk=16)
+    h_a, c_a = mlstm_chunkwise(q[:, :32], k[:, :32], v[:, :32],
+                               ig[:, :32], fg[:, :32], chunk=16)
+    h_b, _ = mlstm_chunkwise(q[:, 32:], k[:, 32:], v[:, 32:],
+                             ig[:, 32:], fg[:, 32:], carry=c_a, chunk=16)
+    np.testing.assert_allclose(np.asarray(h_full[:, 32:]), np.asarray(h_b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_chunked_equals_stepwise():
+    cfg = get_config("hymba-1.5b").reduced()
+    key = jax.random.PRNGKey(0)
+    p = S.ssm_init(key, cfg)
+    rng = np.random.default_rng(0)
+    B, T = 2, 32
+    di = cfg.ssm_expand * cfg.d_model
+    xc = jnp.asarray(rng.normal(size=(B, T, di)), jnp.float32)
+    y_chunk, h_chunk = S.ssm_scan(p, xc, cfg, chunk=8)
+
+    dA, dBx, Cm = S._ssm_params(p, xc, cfg)
+    h = jnp.zeros((B, di, cfg.ssm_state))
+    ys = []
+    for t in range(T):
+        h = dA[:, t] * h + dBx[:, t]
+        ys.append(jnp.einsum("bdn,bn->bd", h, Cm[:, t]))
+    y_step = jnp.stack(ys, 1) + xc * p["dskip"]
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_step),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_chunk), np.asarray(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_decode_continues_prefill():
+    cfg = get_config("hymba-1.5b").reduced()
+    p = S.ssm_init(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(2)
+    B, T = 1, 12
+    x = jnp.asarray(rng.normal(size=(B, T, cfg.d_model)), jnp.float32)
+    full, _ = S.ssm_apply(p, x, cfg)
+
+    di = cfg.ssm_expand * cfg.d_model
+    cache = {"conv": jnp.zeros((B, cfg.ssm_conv - 1, di)),
+             "h": jnp.zeros((B, di, cfg.ssm_state))}
+    outs = []
+    for t in range(T):
+        o, cache = S.ssm_apply(p, x[:, t:t + 1], cfg, cache=cache)
+        outs.append(o)
+    step = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=5e-4, atol=5e-4)
