@@ -9,7 +9,7 @@ import time
 
 from . import (table1_hw, table2_accuracy, fig5_bitwidth, fig6_rmse,
                fig7_taskspecific, latency_throughput, kernel_bench,
-               roofline_report)
+               roofline_report, serving_bench)
 from .common import cached
 
 SUITES = [
@@ -21,6 +21,7 @@ SUITES = [
     ("fig5_bitwidth", fig5_bitwidth),
     ("kernel_bench", kernel_bench),
     ("roofline_report", roofline_report),
+    ("serving_bench", serving_bench),
 ]
 
 

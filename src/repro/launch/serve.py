@@ -1,8 +1,13 @@
 """Serving launcher: batched requests against a (reduced) model, optionally
 with the paper's encoded-MAC inference mode.
 
+  # static batch (dense KV cache):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
       --mac-mode encoded --requests 8
+
+  # continuous batching (paged KV cache + scheduler):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
+      --continuous --slots 4 --page-size 16 --n-pages 256 --requests 16
 """
 from __future__ import annotations
 
@@ -19,6 +24,13 @@ def main():
                     choices=["fp", "int8", "encoded"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over the paged KV cache")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=256)
+    ap.add_argument("--reserve", default="conservative",
+                    choices=["conservative", "optimistic"])
     args = ap.parse_args()
 
     import numpy as np
@@ -27,7 +39,7 @@ def main():
     from repro.core.layers import MacConfig
     from repro.core.mac import EncodedMac
     from repro.models import init_model
-    from repro.serve import ServeEngine
+    from repro.serve import Engine, ServeEngine
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -37,17 +49,38 @@ def main():
         cfg = dataclasses.replace(cfg, mac=MacConfig(mode=args.mac_mode,
                                                      mac=mac))
     params = init_model(jax.random.PRNGKey(0), cfg)
-    engine = ServeEngine(params, cfg, batch_slots=4, max_len=128)
 
     rng = np.random.default_rng(0)
     reqs = [rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
             for _ in range(args.requests)]
+
+    if args.continuous:
+        engine = Engine(params, cfg, n_slots=args.slots,
+                        page_size=args.page_size, n_pages=args.n_pages,
+                        reserve=args.reserve)
+        t0 = time.time()
+        rids = [engine.submit(r, max_new=args.max_new) for r in reqs]
+        outs = engine.run()
+        dt = time.time() - t0
+        st = engine.stats()
+        total = st["decode_tokens"]
+        print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s, mac={args.mac_mode}, continuous)")
+        print(f"  occupancy={st['occupancy']:.2f} "
+              f"evictions={st['evictions']} "
+              f"p50={st['latency_p50_s']:.3f}s p99={st['latency_p99_s']:.3f}s "
+              f"kv_pool={st['kv_pool_bytes'] / 1e6:.1f}MB")
+        for i, rid in enumerate(rids[:3]):
+            print(f"req{i}: {list(map(int, outs[rid][:10]))} ...")
+        return
+
+    engine = ServeEngine(params, cfg, batch_slots=args.slots, max_len=128)
     t0 = time.time()
     outs = engine.run(reqs, max_new=args.max_new)
     dt = time.time() - t0
     total = sum(args.max_new for _ in reqs)
     print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s, mac={args.mac_mode})")
+          f"({total / dt:.1f} tok/s, mac={args.mac_mode}, static)")
     for i, o in enumerate(outs[:3]):
         print(f"req{i}: {list(map(int, o[:10]))} ...")
 

@@ -1,2 +1,3 @@
-from .lm import init_model, apply_model, init_cache
+from .lm import (init_model, apply_model, init_cache, init_paged_cache,
+                 supports_paged_cache)
 from .registry import input_specs

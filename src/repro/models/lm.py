@@ -95,28 +95,36 @@ def init_model(key, cfg):
 # layer-stack execution
 # ---------------------------------------------------------------------------
 
+_CTX_KEYS = ("pos", "pages", "lens")    # broadcast layer-cache context
+
+
 def _strip_pos(tree):
     if isinstance(tree, dict):
-        return {k: _strip_pos(v) for k, v in tree.items() if k != "pos"}
+        return {k: _strip_pos(v) for k, v in tree.items()
+                if k not in _CTX_KEYS}
     return tree
 
 
-def _inject_pos(c_l, kind, pos):
+def _inject_pos(c_l, kind, ctx):
+    """Merge broadcast context (scalar pos, or paged pages/lens) into a
+    per-layer cache slice before the block apply."""
     if c_l is None:
         return None
     c_l = dict(c_l)
     if kind == "hybrid":
-        c_l["attn"] = dict(c_l["attn"], pos=pos)
+        c_l["attn"] = dict(c_l["attn"], **ctx)
     else:
-        c_l["pos"] = pos
+        c_l.update(ctx)
     return c_l
 
 
 def _scan_stack(params_st, x, cfg, kind: str, windows, cache_st, positions,
-                pos0=None):
+                ctx=None):
     """Scan a homogeneous stacked stage. cache_st may be None."""
+    ctx = ctx or {}
+
     def apply_one(p_l, x, c_l, w_l):
-        c_l = _inject_pos(c_l, kind, pos0)
+        c_l = _inject_pos(c_l, kind, ctx)
         if kind == "hybrid":
             out, c2, a = B.hybrid_block_apply(p_l, x, cfg, window=w_l,
                                               cache=c_l, positions=positions)
@@ -284,7 +292,11 @@ def apply_model(params, cfg, tokens, *, img=None, enc_x=None, cache=None,
     x = embed_apply(params["embed"], tokens, cfg.cdtype)
     if cfg.embed_scale:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.cdtype)
-    pos0 = jnp.zeros((), jnp.int32) if cache is None else cache["pos"]
+    paged = cache is not None and "pages" in cache
+    if paged:
+        pos0 = cache["lens"]                  # (B,) ragged per-slot offsets
+    else:
+        pos0 = jnp.zeros((), jnp.int32) if cache is None else cache["pos"]
     if img is not None and cfg.n_patches:
         np_eff = min(cfg.n_patches, S)     # patches lead the prompt
         x = jax.lax.dynamic_update_slice(
@@ -298,7 +310,12 @@ def apply_model(params, cfg, tokens, *, img=None, enc_x=None, cache=None,
         x = jnp.concatenate([meta, x], axis=1)
         S = S + cfg.meta_tokens
     x = constrain(x, AXIS_BATCH, None, None)
-    positions = pos0 + jnp.arange(S)
+    if paged:
+        positions = pos0[:, None] + jnp.arange(S)[None, :]     # (B, S)
+        ctx = {"pages": cache["pages"], "lens": cache["lens"]}
+    else:
+        positions = pos0 + jnp.arange(S)
+        ctx = {"pos": pos0}
 
     aux = jnp.zeros((), jnp.float32)
     new_layers = {}
@@ -312,7 +329,7 @@ def apply_model(params, cfg, tokens, *, img=None, enc_x=None, cache=None,
             x, c2, a = _scan_xlstm(params[name], x, cfg, c_st)
         else:
             x, c2, a = _scan_stack(params[name], x, cfg, kind, win, c_st,
-                                   positions, pos0=pos0)
+                                   positions, ctx=ctx)
         aux = aux + a
         if c2 is not None:
             new_layers[name] = c2
@@ -321,7 +338,10 @@ def apply_model(params, cfg, tokens, *, img=None, enc_x=None, cache=None,
     h = norm_apply(params, x, cfg.norm, cfg.norm_eps, "final_norm")
     logits = _head(params, cfg, h)
     new_cache = None
-    if cache is not None:
+    if paged:
+        new_cache = {"layers": new_layers, "pages": cache["pages"],
+                     "lens": cache["lens"] + S}
+    elif cache is not None:
         new_cache = {"pos": pos0 + S, "layers": new_layers}
     if return_hidden:
         return logits, new_cache, aux, h
@@ -382,3 +402,34 @@ def init_cache(cfg, batch: int, max_len: int):
             c.pop("pos")
             layers[name] = c
     return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+
+
+def supports_paged_cache(cfg) -> bool:
+    """Block paging needs a plain per-layer (k, v) cache: dense/moe GQA
+    attention without MLA latents, recurrent state, or meta tokens."""
+    return (cfg.family in ("dense", "moe") and not cfg.use_mla
+            and not cfg.meta_tokens)
+
+
+def init_paged_cache(cfg, n_pages: int, page_size: int):
+    """Block-paged serving cache: per attention stage a shared pool of
+    fixed-size pages, ``pool_k/pool_v (L, n_pages, page_size, n_kv, hd)``.
+
+    Sequences address the pool through (pages, lens) passed alongside the
+    cache at apply time (see repro.nn.paged); page 0 is the scratch page.
+    Allocation lives host-side in repro.serve.paged_cache."""
+    if not supports_paged_cache(cfg):
+        raise ValueError(
+            f"paged KV cache unsupported for arch {cfg.arch!r} "
+            f"(family={cfg.family}, mla={cfg.use_mla}, "
+            f"meta_tokens={cfg.meta_tokens}); use the dense init_cache")
+    hd = cfg.head_dim_r
+    layers = {}
+    for name, kind, n in _stages(cfg):
+        layers[name] = {
+            "pool_k": jnp.zeros((n, n_pages, page_size, cfg.n_kv_p, hd),
+                                cfg.cdtype),
+            "pool_v": jnp.zeros((n, n_pages, page_size, cfg.n_kv_p, hd),
+                                cfg.cdtype),
+        }
+    return {"layers": layers}

@@ -29,6 +29,7 @@ from repro.parallel.sharding import constrain, AXIS_BATCH, AXIS_MODEL
 from .common import linear, linear_init, apply_rope, softcap, norm_init, \
     norm_apply
 from .attention_mha import mha, NEG_INF, _mask  # grouped-layout core op
+from .paged import scatter_kv, gather_kv, paged_attn_decode
 
 
 def kv_of_q_map(n_heads: int, n_kv: int, n_heads_p: int, n_kv_p: int
@@ -116,6 +117,28 @@ def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
     new_cache = None
     if cache is None:
         out = parallel_attn(q, k, v)
+    elif "pool_k" in cache:
+        # paged serving path (repro.serve): write-through into the shared
+        # page pool, then attend over the gathered page view.  ``positions``
+        # is (B, S) here (per-slot ragged lens from the scheduler).
+        pages, lens = cache["pages"], cache["lens"]
+        pk = scatter_kv(cache["pool_k"], pages, positions, k)
+        pv = scatter_kv(cache["pool_v"], pages, positions, v)
+        if S > 1:
+            # prefill: rows share a start offset (the engine prefills fresh
+            # slots, lens == 0) so a 1-D position vector masks correctly
+            out = mha(q, k, v, kv_map, scale=scale, q_pos=positions[0],
+                      k_pos=positions[0], window=window, cap=cfg.attn_softcap,
+                      chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+        else:
+            ck, cv = gather_kv(pk, pages), gather_kv(pv, pages)
+            k_pos = jnp.arange(ck.shape[1])
+            k_valid = k_pos[None, :] < (lens + 1)[:, None]
+            out = paged_attn_decode(q, ck, cv, kv_map, scale=scale,
+                                    q_pos=positions, k_pos=k_pos,
+                                    k_valid=k_valid, window=window,
+                                    cap=cfg.attn_softcap)
+        new_cache = {"pool_k": pk, "pool_v": pv}
     else:
         ck, cv, pos = cache["k"], cache["v"], cache["pos"]
         # write new k/v at [pos : pos+S) (decode S=1; prefill S=prompt)

@@ -1,0 +1,93 @@
+"""Paged KV-cache primitives (vLLM-style block paging) — pure array ops.
+
+Layout: each attention stage shares one pool of fixed-size pages,
+
+    pool_k / pool_v : (n_pages, page_size, n_kv_heads, head_dim)
+
+indexed per sequence through a page table
+
+    pages : (B, max_pages) int32 — pool page ids.  Page 0 is reserved as
+        the *scratch* page (the allocator never hands it out), so
+        unassigned table entries and padded-token writes land in scratch
+        and are masked on read.
+    lens  : (B,) int32 — tokens already cached (positions < lens valid).
+
+Everything here is shape-static and jit/scan-safe; allocation policy
+(free list, admission, eviction) lives host-side in
+``repro.serve.paged_cache`` / ``repro.serve.scheduler``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import softcap
+from .attention_mha import NEG_INF
+
+
+def scatter_kv(pool: jnp.ndarray, pages: jnp.ndarray,
+               positions: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """Write ``val`` (B, S, H, D) at absolute ``positions`` (B, S) through
+    the page table.  Positions past the table width and positions in
+    unassigned entries both land in the scratch page (0) — never in a
+    real page, whose offsets may hold live tokens."""
+    ps = pool.shape[1]
+    P = pages.shape[1]
+    pi = positions // ps                                  # (B, S) table idx
+    pid = jnp.take_along_axis(pages, jnp.minimum(pi, P - 1), axis=1)
+    pid = jnp.where(pi < P, pid, 0)                       # oob → scratch
+    off = positions % ps
+    return pool.at[pid, off].set(val.astype(pool.dtype))
+
+
+def gather_kv(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
+    """(n_pages, ps, H, D) pool + (B, P) table → (B, P·ps, H, D) view."""
+    B, P = pages.shape
+    ps = pool.shape[1]
+    return pool[pages].reshape(B, P * ps, *pool.shape[2:])
+
+
+def paged_attn_decode(q, k, v, kv_of_q: np.ndarray, *, scale: float,
+                      q_pos, k_pos, k_valid, window=None, cap=None):
+    """Single-token decode attention over a gathered page view.
+
+    q (B, 1, Hq, D); k/v (B, Sk, Hkv, D); q_pos (B, 1); k_pos (Sk,);
+    k_valid (B, Sk).  Mirrors the dense ``mha`` op order — grouped
+    (kv-head, group) layout, f32 accumulation, identical einsum strings —
+    so paged greedy decode stays token-identical to the dense-cache path.
+    Fully-masked rows (idle slots, lens == 0) stay finite because NEG_INF
+    is a finite f32 sentinel.
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    f32 = jnp.float32
+    kv_np = np.asarray(kv_of_q)
+    identity = Hkv == Hq and np.array_equal(kv_np, np.arange(Hq))
+    group = Hq // Hkv if Hkv and Hq % Hkv == 0 else 0
+    uniform = group > 1 and np.array_equal(
+        kv_np, np.minimum(np.arange(Hq) // group, Hkv - 1))
+    if identity:
+        G, He = 1, Hq
+    elif uniform:
+        G, He = group, Hkv
+    else:
+        k = jnp.take(k, jnp.asarray(kv_np), axis=2)
+        v = jnp.take(v, jnp.asarray(kv_np), axis=2)
+        G, He = 1, Hq
+
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(B, Sq, He, G, D)
+    lg = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(f32), k.astype(f32),
+                    preferred_element_type=f32)
+    lg = softcap(lg, cap)
+    d = q_pos[:, :, None] - k_pos[None, None, :]          # (B, Sq, Sk)
+    ok = (d >= 0) & k_valid[:, None, :]
+    if window is not None:
+        ok = ok & (d < window)
+    lg = jnp.where(ok[:, None, None], lg, NEG_INF)
+    p = jax.nn.softmax(lg, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(f32),
+                     preferred_element_type=f32)
+    return out.reshape(B, Sq, Hq, -1).astype(q.dtype)

@@ -1,1 +1,5 @@
-from .engine import make_prefill, make_decode_step, generate, ServeEngine
+from .engine import (make_prefill, make_decode_step, make_paged_prefill,
+                     make_paged_decode_step, generate, Engine, ServeEngine)
+from .paged_cache import PageAllocator, PagedKVCache, pages_for
+from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
+                        FINISHED, EVICTED)

@@ -1,4 +1,18 @@
-"""Serving: prefill / decode step factories + a batched greedy engine.
+"""Serving: prefill / decode step factories, the batched greedy loop, and
+the continuous-batching ``Engine`` over the paged KV cache.
+
+Two serving modes:
+
+  * ``generate`` / ``ServeEngine`` — static batch, dense per-sequence KV
+    cache sized to the worst case (the original path; kept as the
+    benchmark baseline and for archs without paged-cache support).
+  * ``Engine`` — continuous batching: a scheduler admits queued requests
+    into a fixed number of slots under a page budget (vLLM-style paged
+    KV, repro.serve.paged_cache), prefill and decode interleave, and
+    finished slots are swapped for queued requests every step.  Decode is
+    ONE jitted step for all slots regardless of per-request progress, so
+    the encoded-MAC matmul path (cfg.mac.mode='encoded') stays hot under
+    ragged traffic.
 
 serve_step (decode) is THE lowered function for decode_* dry-run shapes:
 one new token against a KV cache of seq_len.  Caches are donated
@@ -7,13 +21,17 @@ one new token against a KV cache of seq_len.  Caches are donated
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import time
+from typing import List, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models import apply_model, init_cache
+from repro.models import apply_model, init_cache, supports_paged_cache
+from .paged_cache import PagedKVCache, pages_for
+from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
+                        FINISHED)
 
 
 def make_prefill(cfg):
@@ -33,8 +51,13 @@ def make_decode_step(cfg):
 
 def generate(params, cfg, prompts: jnp.ndarray, max_new: int = 16,
              max_len: Optional[int] = None, extras: Optional[dict] = None,
-             greedy: bool = True, key=None):
-    """Batched generation loop (greedy or temperature-1 sampling)."""
+             greedy: bool = True, key=None, eos_id: Optional[int] = None):
+    """Batched generation loop (greedy or temperature-1 sampling).
+
+    ``eos_id``: rows that emit it are frozen — subsequent positions repeat
+    ``eos_id`` (so finished sequences stop contributing new tokens) and the
+    loop exits early once every row has finished.  Output stays (B, ≤max_new).
+    """
     B, S = prompts.shape
     max_len = max_len or (S + max_new + (cfg.meta_tokens or 0))
     cache = init_cache(cfg, B, max_len)
@@ -43,8 +66,14 @@ def generate(params, cfg, prompts: jnp.ndarray, max_new: int = 16,
     logits, cache = prefill(params, cache, prompts, **(extras or {}))
     out = []
     tok = jnp.argmax(logits[:, -1:, :cfg.vocab_size], -1).astype(jnp.int32)
+    done = jnp.zeros((B, 1), bool)
     for i in range(max_new):
+        if eos_id is not None:
+            tok = jnp.where(done, jnp.int32(eos_id), tok)
+            done = done | (tok == eos_id)
         out.append(tok)
+        if eos_id is not None and bool(done.all()):
+            break
         logits, cache = step(params, cache, tok)
         lg = logits[:, -1:, :cfg.vocab_size]
         if greedy:
@@ -55,13 +84,233 @@ def generate(params, cfg, prompts: jnp.ndarray, max_new: int = 16,
     return jnp.concatenate(out, axis=1)
 
 
-class ServeEngine:
-    """Minimal batched serving engine: fixed-batch continuous decode.
+# ---------------------------------------------------------------------------
+# paged step factories
+# ---------------------------------------------------------------------------
 
-    Requests queue up; a slot map tracks per-slot progress; finished slots
-    are refilled from the queue (static shapes — TPU-friendly).  This is the
-    substrate the encoded-MAC inference mode plugs into (mac.mode='encoded'
-    simulates the paper's MAC array for every linear layer).
+def make_paged_prefill(cfg):
+    """Prefill one right-padded prompt into its pages; returns per-position
+    greedy tokens (the engine picks index plen−1) + the updated pools."""
+    def prefill(params, layers, tokens, pages, lens):
+        cache = {"layers": layers, "pages": pages, "lens": lens}
+        logits, nc, _ = apply_model(params, cfg, tokens, cache=cache)
+        toks = jnp.argmax(logits[..., :cfg.vocab_size], -1).astype(jnp.int32)
+        return toks, nc["layers"]
+    return prefill
+
+
+def make_paged_decode_step(cfg):
+    """One token for every slot against the shared page pool (greedy)."""
+    def step(params, layers, tokens, pages, lens):
+        cache = {"layers": layers, "pages": pages, "lens": lens}
+        logits, nc, _ = apply_model(params, cfg, tokens, cache=cache)
+        toks = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1
+                          ).astype(jnp.int32)
+        return toks, nc["layers"]
+    return step
+
+
+def _bucket(n: int, lo: int = 8) -> int:
+    """Next power-of-two prompt bucket (bounds prefill recompiles)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Continuous-batching greedy serving engine over the paged KV cache.
+
+    Static shapes throughout: decode compiles once for (n_slots, 1) tokens;
+    prefill compiles once per power-of-two prompt bucket (B=1, padded right
+    — padded writes land in the scratch page or are overwritten by later
+    decode steps before they become readable).
+
+    ``reserve='conservative'`` admits a request only when pages for
+    prompt+max_new are free (no mid-flight exhaustion);
+    ``reserve='optimistic'`` admits on prompt pages alone and grows
+    page-by-page, evicting the youngest running request on exhaustion.
+    """
+
+    def __init__(self, params, cfg, *, n_slots: int = 4,
+                 page_size: int = 16, n_pages: int = 128,
+                 max_seq_pages: Optional[int] = None,
+                 reserve: str = "conservative"):
+        if not supports_paged_cache(cfg):
+            raise ValueError(
+                f"{cfg.arch!r} cannot serve paged; use ServeEngine")
+        self.params, self.cfg = params, cfg
+        if max_seq_pages is None:
+            # default: one sequence may hold up to half the pool
+            max_seq_pages = max(4, (n_pages - 1) // 2)
+        self.kv = PagedKVCache(cfg, n_slots, n_pages, page_size,
+                               max_seq_pages)
+        self.sched = Scheduler(self.kv, reserve=reserve)
+        self._prefill = jax.jit(make_paged_prefill(cfg),
+                                donate_argnums=(1,))
+        self._step = jax.jit(make_paged_decode_step(cfg),
+                             donate_argnums=(1,))
+        self.requests = {}
+        self._next_rid = 0
+        self.clock = 0                     # logical steps
+        self.metrics = {"steps": 0, "decode_tokens": 0,
+                        "prefill_tokens": 0, "prefills": 0,
+                        "occupancy_sum": 0.0}
+
+    # ---- API ---------------------------------------------------------------
+
+    def submit(self, prompt, max_new: int = 32,
+               eos_id: Optional[int] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32).ravel(),
+                      max_new=max_new, eos_id=eos_id,
+                      t_arrive=time.perf_counter())
+        self.requests[rid] = req
+        self.sched.submit(req)
+        return rid
+
+    @property
+    def busy(self) -> bool:
+        return self.sched.busy
+
+    def run(self, max_steps: int = 100_000) -> dict:
+        """Drive the loop until the queue and all slots drain."""
+        while self.busy:
+            self.step()
+            if self.metrics["steps"] > max_steps:
+                raise RuntimeError("engine did not drain (livelock?)")
+        return self.results()
+
+    def results(self) -> dict:
+        return {rid: np.asarray(r.out, np.int32)
+                for rid, r in self.requests.items() if r.state == FINISHED}
+
+    # ---- one scheduler tick ------------------------------------------------
+
+    def step(self) -> None:
+        self._admit()
+        active = self._runnable()
+        self.metrics["steps"] += 1
+        self.clock += 1
+        self.metrics["occupancy_sum"] += len(active) / self.kv.n_slots
+        if not active:
+            if not self.sched.queue:
+                return
+            # a prefill may have finished at its first token and freed
+            # pages mid-_admit; try once more before declaring starvation
+            self._admit()
+            active = self._runnable()
+            if not active:
+                if self.sched.queue:
+                    raise RuntimeError(
+                        "page pool too small for the queued request "
+                        f"(need {self.sched._pages_needed(self.sched.queue[0])}"
+                        f" pages, {self.kv.alloc.n_free} free)")
+                return
+        tokens = np.zeros((self.kv.n_slots, 1), np.int32)
+        # refresh lens for every slotted request (stalled ones included, so
+        # their dummy write this step lands past their pages → scratch)
+        for r in self.sched.slots:
+            if r is not None:
+                self.kv.set_len(r.slot, r.n_cached)
+        for req in active:
+            tokens[req.slot, 0] = req.out[-1]
+        toks, self.kv.layers = self._step(
+            self.params, self.kv.layers, jnp.asarray(tokens),
+            self.kv.pages_dev(), self.kv.lens_dev())
+        toks = np.asarray(toks)
+        now = time.perf_counter()
+        for req in active:
+            req.n_cached += 1
+            req.out.append(int(toks[req.slot]))
+            self.metrics["decode_tokens"] += 1
+            if req.done:
+                self.sched.finish(req, now)
+
+    def _admit(self) -> None:
+        for slot, req in self.sched.admissions():
+            self._run_prefill(slot, req)
+
+    def _runnable(self):
+        """Decoding requests with a page for their next write, oldest first
+        (growth may evict younger requests; a request that can neither grow
+        nor evict stalls for this step)."""
+        out = []
+        for req in sorted(self.sched.active(),
+                          key=lambda r: (r.t_arrive, r.rid)):
+            if req.state == DECODING and self.sched.ensure_page(req):
+                out.append(req)
+        return out
+
+    def _run_prefill(self, slot: int, req: Request) -> None:
+        plen = req.plen
+        Sp = _bucket(plen)
+        padded = np.zeros((1, Sp), np.int32)
+        padded[0, :plen] = req.prompt
+        toks, self.kv.layers = self._prefill(
+            self.params, self.kv.layers, jnp.asarray(padded),
+            self.kv.pages_dev()[slot:slot + 1],
+            jnp.zeros((1,), jnp.int32))
+        now = time.perf_counter()
+        first = int(np.asarray(toks)[0, plen - 1])
+        req.n_cached = plen
+        req.out = [first]
+        req.t_first = now
+        req.state = DECODING
+        self.kv.set_len(slot, plen)
+        self.metrics["prefills"] += 1
+        self.metrics["prefill_tokens"] += plen
+        if req.done:                       # eos on the very first token
+            self.sched.finish(req, now)
+
+    # ---- reporting ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        fin = [r for r in self.requests.values() if r.state == FINISHED]
+        lat = sorted((r.t_finish - r.t_arrive) for r in fin
+                     if r.t_finish is not None)
+        ttft = sorted((r.t_first - r.t_arrive) for r in fin
+                      if r.t_first is not None)
+
+        def pct(xs, q):
+            if not xs:
+                return float("nan")
+            i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
+            return xs[i]
+
+        m = dict(self.metrics)
+        m.update({
+            "finished": len(fin),
+            "evictions": self.sched.n_evictions,
+            "occupancy": (m["occupancy_sum"] / m["steps"]
+                          if m["steps"] else 0.0),
+            "latency_p50_s": pct(lat, 0.50),
+            "latency_p99_s": pct(lat, 0.99),
+            "ttft_p50_s": pct(ttft, 0.50),
+            "kv_pool_bytes": self.kv.mem_bytes(),
+            "page_size": self.kv.page_size,
+            "n_pages": self.kv.n_pages,
+            "n_slots": self.kv.n_slots,
+        })
+        return m
+
+
+# ---------------------------------------------------------------------------
+# static-batch engine (baseline / non-paged archs)
+# ---------------------------------------------------------------------------
+
+class ServeEngine:
+    """Static-batch serving engine: fixed-batch greedy decode.
+
+    Requests are chunked into fixed batches, left-padded to the chunk's
+    longest prompt, and each chunk runs ``generate`` to completion before
+    the next starts — the baseline the continuous-batching ``Engine``
+    is measured against (benchmarks/serving_bench.py).
     """
 
     def __init__(self, params, cfg, batch_slots: int = 8,
@@ -72,8 +321,8 @@ class ServeEngine:
         self.prefill = jax.jit(make_prefill(cfg))
         self.batch_slots = batch_slots
 
-    def run(self, requests: list[np.ndarray], max_new: int = 32
-            ) -> list[np.ndarray]:
+    def run(self, requests: List[np.ndarray], max_new: int = 32,
+            eos_id: Optional[int] = None) -> List[np.ndarray]:
         """Serve a list of prompt arrays; returns generated ids per request."""
         results = []
         for i in range(0, len(requests), self.batch_slots):
@@ -84,6 +333,6 @@ class ServeEngine:
                 batch[j, S - len(r):] = r          # left-pad
             toks = generate(self.params, self.cfg, jnp.asarray(batch),
                             max_new=max_new, max_len=S + max_new + 8 +
-                            (self.cfg.meta_tokens or 0))
+                            (self.cfg.meta_tokens or 0), eos_id=eos_id)
             results.extend(np.asarray(toks))
         return results

@@ -1,0 +1,114 @@
+"""Host-side paged-KV management: free-list page allocator + slot state.
+
+Device-side layout and the attention ops live in ``repro.nn.paged`` /
+``repro.models.init_paged_cache``; this module owns the mutable host
+state the scheduler works against:
+
+  * ``PageAllocator`` — a free list over pool page ids.  Page 0 is the
+    reserved *scratch* page (padded/idle writes land there), so ids
+    handed out are in ``[1, n_pages)``.
+  * ``PagedKVCache`` — the device pools plus per-slot page tables and
+    lengths (numpy, mirrored to device each engine step).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models import init_paged_cache, supports_paged_cache
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold n_tokens (at least one)."""
+    return max(1, math.ceil(n_tokens / page_size))
+
+
+class PageAllocator:
+    """LIFO free-list allocator over pool pages [1, n_pages).
+
+    ``alloc`` is all-or-nothing (returns None when the request can't be
+    covered) so admission control never partially commits a sequence."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is scratch)")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._held = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        self._held.update(out)
+        return out
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._held:
+                raise ValueError(f"double/foreign free of page {p}")
+            self._held.discard(p)
+            self._free.append(p)
+
+
+class PagedKVCache:
+    """Device page pools + host page tables for a fixed slot count.
+
+    ``layers`` is the jit-carried pytree (donated through decode steps);
+    ``ptab``/``lens`` are numpy, written by the scheduler and uploaded as
+    small int arrays each step.  Unassigned table entries stay 0 →
+    scratch page."""
+
+    def __init__(self, cfg, n_slots: int, n_pages: int, page_size: int,
+                 max_seq_pages: int):
+        if not supports_paged_cache(cfg):
+            raise ValueError(f"arch {cfg.arch!r} has no paged-cache support")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.max_seq_pages = min(max_seq_pages, n_pages - 1)
+        self.layers = init_paged_cache(cfg, n_pages, page_size)["layers"]
+        self.alloc = PageAllocator(n_pages)
+        self.ptab = np.zeros((n_slots, self.max_seq_pages), np.int32)
+        self.lens = np.zeros((n_slots,), np.int32)
+
+    @property
+    def max_seq_tokens(self) -> int:
+        return self.max_seq_pages * self.page_size
+
+    def set_pages(self, slot: int, pages: List[int]) -> None:
+        row = np.zeros((self.max_seq_pages,), np.int32)
+        row[:len(pages)] = pages
+        self.ptab[slot] = row
+
+    def set_len(self, slot: int, n: int) -> None:
+        self.lens[slot] = n
+
+    def reset_slot(self, slot: int) -> None:
+        self.ptab[slot] = 0
+        self.lens[slot] = 0
+
+    def pages_dev(self) -> jnp.ndarray:
+        return jnp.asarray(self.ptab)
+
+    def lens_dev(self) -> jnp.ndarray:
+        return jnp.asarray(self.lens)
+
+    def mem_bytes(self) -> int:
+        """Total pool bytes across stages (k+v)."""
+        total = 0
+        for st in self.layers.values():
+            for a in st.values():
+                total += a.size * a.dtype.itemsize
+        return total

@@ -1,0 +1,174 @@
+"""Continuous-batching scheduler: request queue, admission under a page
+budget, per-request lifecycle, page growth with eviction fallback.
+
+Request states::
+
+    queued → prefilling → decoding → finished
+                 ↑____________|  (evicted: pages freed, requeued at the
+                                  front, prefill restarts from scratch)
+
+Admission is FCFS (head-of-line blocking keeps latency fair); the page
+reservation policy is either
+
+  * ``conservative`` — reserve pages for ``len(prompt) + max_new`` at
+    admission, so a running sequence can never run out of pages, or
+  * ``optimistic``  — reserve only the prompt's pages and grow page-by-
+    page during decode; on exhaustion the youngest other running request
+    is evicted (vLLM-style recompute preemption).
+
+The scheduler is pure host-side bookkeeping — it never touches device
+arrays.  The engine drives it and owns the jitted prefill/decode steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from .paged_cache import PagedKVCache, pages_for
+
+QUEUED, PREFILLING, DECODING, FINISHED, EVICTED = (
+    "queued", "prefilling", "decoding", "finished", "evicted")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (plen,) int32
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    state: str = QUEUED
+    slot: Optional[int] = None
+    pages: List[int] = dataclasses.field(default_factory=list)
+    out: List[int] = dataclasses.field(default_factory=list)
+    n_cached: int = 0                  # tokens with KV in the pool
+    n_evictions: int = 0
+    t_arrive: float = 0.0
+    t_first: Optional[float] = None    # first generated token (wall)
+    t_finish: Optional[float] = None
+
+    @property
+    def plen(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return (len(self.out) >= self.max_new
+                or (self.eos_id is not None and len(self.out) > 0
+                    and self.out[-1] == self.eos_id))
+
+
+class Scheduler:
+    """FCFS continuous-batching scheduler over a PagedKVCache."""
+
+    def __init__(self, kv: PagedKVCache, reserve: str = "conservative"):
+        if reserve not in ("conservative", "optimistic"):
+            raise ValueError(f"unknown reserve policy {reserve!r}")
+        self.kv = kv
+        self.reserve = reserve
+        self.queue: deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * kv.n_slots
+        self.n_evictions = 0
+
+    # ---- queue / slots -----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        max_tokens = self.kv.max_seq_tokens
+        if req.plen + req.max_new > max_tokens:
+            raise ValueError(
+                f"request {req.rid}: {req.plen}+{req.max_new} tokens exceed "
+                f"the {max_tokens}-token per-sequence page table")
+        req.state = QUEUED
+        self.queue.append(req)
+
+    def active(self) -> List[Request]:
+        return [r for r in self.slots if r is not None and r.state == DECODING]
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    def _pages_needed(self, req: Request) -> int:
+        if self.reserve == "conservative":
+            return pages_for(req.plen + req.max_new, self.kv.page_size)
+        return pages_for(req.plen, self.kv.page_size)
+
+    def admissions(self) -> List[Tuple[int, Request]]:
+        """Admit queued requests into free slots while pages last (FCFS)."""
+        out = []
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        while self.queue and free:
+            req = self.queue[0]
+            pages = self.kv.alloc.alloc(self._pages_needed(req))
+            if pages is None:
+                break                        # head-of-line: wait for pages
+            self.queue.popleft()
+            slot = free.pop(0)
+            req.slot, req.pages, req.state = slot, pages, PREFILLING
+            req.out, req.n_cached = [], 0
+            self.slots[slot] = req
+            self.kv.set_pages(slot, pages)
+            self.kv.set_len(slot, 0)
+            out.append((slot, req))
+        return out
+
+    # ---- page growth / eviction -------------------------------------------
+
+    def ensure_page(self, req: Request) -> bool:
+        """Make sure the page for the next write position exists.  May evict
+        a strictly *younger* running request (FCFS priority — the oldest
+        sequence always makes progress, so the system can never livelock).
+        False → no page and no younger victim: ``req`` keeps its pages but
+        stalls this step (it retries once something older frees pages)."""
+        while req.n_cached >= len(req.pages) * self.kv.page_size:
+            grown = self.kv.alloc.alloc(1)
+            if grown is not None:
+                req.pages.extend(grown)
+                self.kv.set_pages(req.slot, req.pages)
+                continue
+            victim = self._pick_victim(req)
+            if victim is not None:
+                self.evict(victim)
+                continue
+            if all(r is None or r is req for r in self.slots):
+                # req is the only page holder and the pool is exhausted —
+                # waiting could never help, so fail loudly
+                raise RuntimeError(
+                    f"page pool exhausted by request {req.rid} alone "
+                    f"({len(req.pages)} pages); increase n_pages or use "
+                    f"reserve='conservative'")
+            return False
+        return True
+
+    def _pick_victim(self, requesting: Request) -> Optional[Request]:
+        """Youngest running request strictly younger than ``requesting``."""
+        cands = [r for r in self.slots
+                 if r is not None and r is not requesting
+                 and (r.t_arrive, r.rid) > (requesting.t_arrive,
+                                            requesting.rid)]
+        if not cands:
+            return None
+        return max(cands, key=lambda r: (r.t_arrive, r.rid))
+
+    def evict(self, req: Request) -> None:
+        """Free a running request's pages and requeue it at the front;
+        generation restarts from the prompt on re-admission (recompute)."""
+        self.kv.reset_slot(req.slot)
+        self.slots[req.slot] = None
+        self.kv.alloc.free(req.pages)
+        req.pages, req.slot = [], None
+        req.out, req.n_cached = [], 0
+        req.state = QUEUED
+        req.n_evictions += 1
+        self.n_evictions += 1
+        self.queue.appendleft(req)
+
+    def finish(self, req: Request, t: float) -> None:
+        self.kv.reset_slot(req.slot)
+        self.slots[req.slot] = None
+        self.kv.alloc.free(req.pages)
+        req.pages, req.slot = [], None
+        req.state = FINISHED
+        req.t_finish = t

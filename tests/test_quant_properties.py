@@ -2,6 +2,10 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] "
+                    "extra (pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.quant.uniform import (quantize_codes, dequantize, fake_quant,

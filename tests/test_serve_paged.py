@@ -1,0 +1,221 @@
+"""Paged-KV serving subsystem: allocator reuse/exhaustion, scheduler
+admission & eviction, and paged greedy decode == dense generate()
+token-for-token (incl. EOS handling)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_model, init_paged_cache, supports_paged_cache
+from repro.serve import (Engine, ServeEngine, generate, PageAllocator,
+                         PagedKVCache, Scheduler, Request, pages_for,
+                         DECODING, FINISHED)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# allocator
+# ---------------------------------------------------------------------------
+
+def test_page_allocator_reuse_and_exhaustion():
+    al = PageAllocator(8)                       # pages 1..7 usable
+    assert al.n_free == 7
+    a = al.alloc(3)
+    b = al.alloc(4)
+    assert a is not None and b is not None
+    assert 0 not in a + b                       # page 0 is scratch
+    assert al.alloc(1) is None                  # exhausted → all-or-nothing
+    assert al.n_free == 0
+    al.free(a)
+    assert al.n_free == 3
+    with pytest.raises(ValueError):
+        al.free(a)                              # double free
+    c = al.alloc(3)                             # freed pages are reused
+    assert sorted(c) == sorted(a)
+    assert pages_for(1, 4) == 1 and pages_for(9, 4) == 3
+
+
+# ---------------------------------------------------------------------------
+# scheduler (host-side only — no model)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_admits_after_slot_frees(qwen):
+    cfg, _ = qwen
+    kv = PagedKVCache(cfg, n_slots=1, n_pages=32, page_size=4,
+                      max_seq_pages=8)
+    sched = Scheduler(kv)
+    r1 = Request(rid=0, prompt=np.zeros(5, np.int32), max_new=4)
+    r2 = Request(rid=1, prompt=np.zeros(3, np.int32), max_new=4)
+    sched.submit(r1)
+    sched.submit(r2)
+    adm = sched.admissions()
+    assert [r.rid for _, r in adm] == [0]       # one slot → r2 waits
+    r1.state = DECODING
+    assert sched.admissions() == []
+    sched.finish(r1, t=1.0)
+    assert r1.state == FINISHED
+    assert kv.alloc.n_free == 31                # r1's pages were returned
+    adm = sched.admissions()                    # the step after the slot
+    assert [r.rid for _, r in adm] == [1]       # frees, r2 is admitted
+    assert np.all(kv.ptab[0, :len(r2.pages)] == r2.pages)
+
+
+def test_scheduler_blocks_on_page_budget(qwen):
+    cfg, _ = qwen
+    kv = PagedKVCache(cfg, n_slots=2, n_pages=5, page_size=4,
+                      max_seq_pages=4)          # 4 usable pages
+    sched = Scheduler(kv)                       # conservative reserve
+    r1 = Request(rid=0, prompt=np.zeros(8, np.int32), max_new=4)   # 3 pages
+    r2 = Request(rid=1, prompt=np.zeros(8, np.int32), max_new=4)   # 3 pages
+    sched.submit(r1)
+    sched.submit(r2)
+    adm = sched.admissions()
+    assert [r.rid for _, r in adm] == [0]       # free slot, but no pages
+    r1.state = DECODING
+    sched.finish(r1, t=1.0)
+    assert [r.rid for _, r in sched.admissions()] == [1]
+
+
+# ---------------------------------------------------------------------------
+# paged decode vs dense path
+# ---------------------------------------------------------------------------
+
+def test_paged_greedy_matches_dense_generate(qwen):
+    cfg, params = qwen
+    eng = Engine(params, cfg, n_slots=2, page_size=4, n_pages=32)
+    prompts = _prompts(cfg, (5, 12, 9))        # 3 reqs > 2 slots: queueing
+    rids = [eng.submit(p, max_new=6) for p in prompts]
+    res = eng.run()
+    assert eng.stats()["finished"] == 3
+    for rid, p in zip(rids, prompts):
+        ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                                  max_new=6))[0]
+        assert res[rid].tolist() == ref.tolist(), f"req {rid} diverged"
+
+
+def test_paged_matches_dense_with_sliding_window():
+    """gemma2 reduced: alternating local/global layers, softcaps, post-norm;
+    prompt long enough that the 64-token window actually masks."""
+    import dataclasses
+    cfg = get_config("gemma2-27b").reduced()
+    cfg = dataclasses.replace(cfg, sliding_window=16)
+    params = init_model(jax.random.PRNGKey(1), cfg)
+    prompt = _prompts(cfg, (40,), seed=3)[0]
+    eng = Engine(params, cfg, n_slots=1, page_size=8, n_pages=16)
+    rid = eng.submit(prompt, max_new=5)
+    res = eng.run()
+    ref = np.asarray(generate(params, cfg, jnp.asarray(prompt)[None],
+                              max_new=5))[0]
+    assert res[rid].tolist() == ref.tolist()
+
+
+def test_eviction_under_page_pressure(qwen):
+    cfg, params = qwen
+    prompts = _prompts(cfg, (5, 3), seed=1)
+    eng = Engine(params, cfg, n_slots=2, page_size=4, n_pages=7,
+                 reserve="optimistic")          # 6 usable pages < 4+4 needed
+    rids = [eng.submit(p, max_new=10) for p in prompts]
+    res = eng.run()
+    st = eng.stats()
+    assert st["evictions"] >= 1                 # someone got preempted...
+    assert st["finished"] == 2                  # ...yet everyone finished
+    for rid, p in zip(rids, prompts):           # recompute kept greedy exact
+        ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                                  max_new=10))[0]
+        assert res[rid].tolist() == ref.tolist()
+
+
+def test_prefill_bucket_overflow_lands_in_scratch(qwen):
+    """Prompt whose padded prefill bucket exceeds the per-sequence page
+    table: the overflow writes must hit the scratch page, not wrap onto
+    the last real page (which holds live prompt K/V)."""
+    cfg, params = qwen
+    eng = Engine(params, cfg, n_slots=1, page_size=4, n_pages=64,
+                 max_seq_pages=5)               # 20-token cap; bucket(18)=32
+    p = _prompts(cfg, (18,), seed=6)[0]
+    rid = eng.submit(p, max_new=2)
+    res = eng.run()
+    ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                              max_new=2))[0]
+    assert res[rid].tolist() == ref.tolist()
+
+
+def test_retry_admission_gets_pages_before_decode(qwen):
+    """A request admitted on the starvation-retry path (slot freed by an
+    EOS-at-prefill finish) must still get a page for its first decode
+    write when its prompt exactly fills its pages (optimistic mode)."""
+    cfg, params = qwen
+    pa, pb = _prompts(cfg, (8, 8), seed=7)      # plen == 2 * page_size
+    ref_a = np.asarray(generate(params, cfg, jnp.asarray(pa)[None],
+                                max_new=4))[0]
+    ref_b = np.asarray(generate(params, cfg, jnp.asarray(pb)[None],
+                                max_new=4))[0]
+    eng = Engine(params, cfg, n_slots=1, page_size=4, n_pages=4,
+                 max_seq_pages=3, reserve="optimistic")   # 3 usable pages
+    ra = eng.submit(pa, max_new=4, eos_id=int(ref_a[0]))  # dies at prefill
+    rb = eng.submit(pb, max_new=4)
+    res = eng.run()
+    assert res[ra].tolist() == [int(ref_a[0])]
+    assert res[rb].tolist() == ref_b.tolist()
+
+
+def test_unsupported_arch_rejected():
+    cfg = get_config("hymba-1.5b").reduced()    # ssm state + meta tokens
+    assert not supports_paged_cache(cfg)
+    with pytest.raises(ValueError):
+        init_paged_cache(cfg, 8, 4)
+
+
+# ---------------------------------------------------------------------------
+# EOS handling
+# ---------------------------------------------------------------------------
+
+def test_generate_eos_freezes_finished_rows(qwen):
+    cfg, params = qwen
+    prompts = jnp.asarray(np.stack([p[:5] for p in _prompts(
+        cfg, (5, 5), seed=2)]))
+    ref = np.asarray(generate(params, cfg, prompts, max_new=6))
+    eos = int(ref[0, 2])                        # row 0's 3rd token
+    out = np.asarray(generate(params, cfg, prompts, max_new=6, eos_id=eos))
+    assert out.shape[1] <= 6
+    # row 0 froze at eos; everything after is eos padding
+    row = out[0].tolist()
+    assert row[:3] == ref[0, :3].tolist()
+    assert all(t == eos for t in row[3:])
+    # unaffected row matches the no-eos rollout (until any own eos)
+    row1 = out[1].tolist()
+    stop = row1.index(eos) + 1 if eos in row1 else len(row1)
+    assert row1[:stop] == ref[1, :stop].tolist()
+
+
+def test_engine_eos_stops_request(qwen):
+    cfg, params = qwen
+    p = _prompts(cfg, (7,), seed=4)[0]
+    ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                              max_new=6))[0]
+    eos = int(ref[2])
+    eng = Engine(params, cfg, n_slots=1, page_size=4, n_pages=16)
+    rid = eng.submit(p, max_new=6, eos_id=eos)
+    out = eng.run()[rid]
+    assert out.tolist() == ref[:3].tolist()     # stops AT the eos token
+
+
+def test_serve_engine_baseline_still_works(qwen):
+    cfg, params = qwen
+    reqs = _prompts(cfg, (4, 9, 6), seed=5)
+    outs = ServeEngine(params, cfg, batch_slots=2).run(reqs, max_new=4)
+    assert len(outs) == 3
+    assert all(o.shape == (4,) for o in outs)
