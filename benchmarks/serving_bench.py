@@ -4,7 +4,16 @@ mixed max_new) against (a) the continuous-batching paged-KV ``Engine`` and
 
 Records aggregate tokens/s, p50/p99 request latency, occupancy, and checks
 that paged greedy decode stays token-identical to the dense path.
+
+``--mac encoded`` (or ``run_encoded()``) adds the accuracy-vs-throughput
+mode: the same trace replayed through the continuous engine with dense fp
+matmuls and with the calibrated encoded-MAC path (pre-folded bitplane
+weights, repro.serve.encoded) at an EQUAL page budget, reporting tokens/s,
+p99 latency, and top-1 logit agreement vs the dense path in one command:
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --mac encoded
 """
+import argparse
 import time
 
 import numpy as np
@@ -155,3 +164,147 @@ def csv_lines(res):
         f"serving_p99_static_s,0,{s['latency_p99_s']:.3f}",
         f"serving_token_identical,0,{int(res['token_identical_to_dense'])}",
     ]
+
+
+# ---------------------------------------------------------------------------
+# accuracy-vs-throughput: dense fp vs calibrated encoded-MAC serving
+# ---------------------------------------------------------------------------
+
+def _engine_metrics(eng, rids, wall, total_tokens):
+    lat = [(r.t_finish - r.t_arrive) for r in eng.requests.values()
+           if r.t_finish is not None]
+    st = eng.stats()
+    return {
+        "tokens_per_s": total_tokens / wall,
+        "wall_s": wall,
+        "latency_p50_s": _pct(lat, 0.50),
+        "latency_p99_s": _pct(lat, 0.99),
+        "occupancy": st["occupancy"],
+        "mac_mode": st["mac_mode"],
+    }
+
+
+def _logit_agreement(params_d, cfg_d, params_e, cfg_e, prompts):
+    """Top-1 argmax agreement + mean |Δlogit| between the dense fp forward
+    and the encoded forward over full prompt prefills (all positions)."""
+    import jax.numpy as jnp
+    from repro.models import apply_model
+    agree, n, dsum = 0, 0, 0.0
+    for p in prompts:
+        t = jnp.asarray(p)[None]
+        ld, _, _ = apply_model(params_d, cfg_d, t)
+        le, _, _ = apply_model(params_e, cfg_e, t)
+        ld, le = np.asarray(ld[0]), np.asarray(le[0])
+        agree += int((ld.argmax(-1) == le.argmax(-1)).sum())
+        n += ld.shape[0]
+        dsum += float(np.abs(ld - le).mean())
+    return agree / max(n, 1), dsum / max(len(prompts), 1)
+
+
+def run_encoded(m_bits: int = 48, n_samples: int = 128, refine: int = 64):
+    """Dense vs encoded continuous serving at an equal page budget."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serve import prepare_encoded_serving
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    t0 = time.perf_counter()
+    params_e, cfg_e, info = prepare_encoded_serving(
+        params, cfg, m_bits=m_bits, n_samples=n_samples, refine=refine)
+    prep_s = time.perf_counter() - t0
+
+    rng = np.random.default_rng(SEED)
+    trace = _trace(cfg, rng)
+    total_tokens = sum(m for _, m, _ in trace)
+    budget_tokens = N_SLOTS * (MAX_PROMPT + 16 + 8)
+    n_pages = budget_tokens // PAGE_SIZE + 1
+
+    # warmup replays (absorb jit compiles for both MAC paths)
+    _run_continuous(params, cfg, trace, n_pages, timed=False)
+    _run_continuous(params_e, cfg_e, trace, n_pages, timed=False)
+
+    eng_d, rids_d, wall_d = _run_continuous(params, cfg, trace, n_pages)
+    eng_e, rids_e, wall_e = _run_continuous(params_e, cfg_e, trace, n_pages)
+    top1, dlogit = _logit_agreement(params, cfg, params_e, cfg_e,
+                                    [p for p, _, _ in trace[:4]])
+
+    # int8 ceiling: the bit-exact AND-plane encoding isolates the plain
+    # quantization error from the searched encoding's approximation error
+    from repro.core.circuits import exact_product_circuit
+    from repro.core.encoding import EncodingSpec
+    from repro.core.mac import EncodedMac
+    circ, s = exact_product_circuit(cfg.mac.bits, cfg.mac.bits)
+    exact = EncodedMac.from_spec(EncodingSpec(circ, s, 0.0))
+    params_x, cfg_x, _ = prepare_encoded_serving(
+        params, cfg, macs_override={n: exact for n in info["families"]},
+        verbose=False)
+    top1_x, _ = _logit_agreement(params, cfg, params_x, cfg_x,
+                                 [p for p, _, _ in trace[:4]])
+
+    return {
+        "trace": {"n_requests": N_REQ, "arrival_rate_hz": ARRIVAL_RATE,
+                  "total_tokens": total_tokens, "page_size": PAGE_SIZE,
+                  "n_pages": n_pages, "n_slots": N_SLOTS},
+        "prepare_s": prep_s,
+        "artifact": {"bundle_dir": info["bundle_dir"],
+                     "loaded_from_cache": info["loaded"],
+                     "family_rmse": info["families"]},
+        "dense": _engine_metrics(eng_d, rids_d, wall_d, total_tokens),
+        "encoded": _engine_metrics(eng_e, rids_e, wall_e, total_tokens),
+        "top1_logit_agreement": top1,
+        "top1_logit_agreement_int8_ceiling": top1_x,
+        "mean_abs_logit_delta": dlogit,
+        "encoded_vs_dense_tok_s": wall_d / wall_e,
+    }
+
+
+def csv_lines_encoded(res):
+    d, e = res["dense"], res["encoded"]
+    return [
+        f"serving_dense_tok_s,0,{d['tokens_per_s']:.2f}",
+        f"serving_encoded_tok_s,0,{e['tokens_per_s']:.2f}",
+        f"serving_encoded_rel_tok_s,0,{res['encoded_vs_dense_tok_s']:.3f}",
+        f"serving_p99_dense_s,0,{d['latency_p99_s']:.3f}",
+        f"serving_p99_encoded_s,0,{e['latency_p99_s']:.3f}",
+        f"serving_top1_logit_agreement,0,{res['top1_logit_agreement']:.3f}",
+        f"serving_top1_agreement_int8_ceiling,0,"
+        f"{res['top1_logit_agreement_int8_ceiling']:.3f}",
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mac", default="fp", choices=["fp", "encoded"],
+                    help="fp = continuous-vs-static baseline bench; "
+                         "encoded = dense-vs-encoded accuracy/throughput")
+    ap.add_argument("--m-bits", type=int, default=48)
+    ap.add_argument("--calib-samples", type=int, default=128)
+    ap.add_argument("--calib-refine", type=int, default=64)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    try:
+        from .common import cached          # python -m benchmarks.serving_bench
+    except ImportError:
+        from common import cached           # python benchmarks/serving_bench.py
+    if args.mac == "encoded":
+        # cache key carries the search hyperparameters so flag changes
+        # never report another configuration's stale numbers
+        name = (f"serving_bench_encoded_m{args.m_bits}"
+                f"_s{args.calib_samples}_r{args.calib_refine}")
+        res = cached(name,
+                     lambda: run_encoded(args.m_bits, args.calib_samples,
+                                         args.calib_refine),
+                     force=args.force)
+        lines = csv_lines_encoded(res)
+    else:
+        res = cached("serving_bench", run, force=args.force)
+        lines = csv_lines(res)
+    print("name,us_per_call,derived")
+    for line in lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

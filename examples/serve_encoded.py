@@ -1,6 +1,11 @@
-"""Serve a small LM with batched requests under the encoded-MAC inference
-mode — the systems integration of the paper's accelerator (every linear
-layer computes through the encoding simulation).
+"""Serve a small LM under the calibrated encoded-MAC inference mode — the
+systems integration of the paper's accelerator: per-projection-family
+encodings are searched against calibration traffic, weights are pre-folded
+into bitplane tensors, and every projection runs through
+kernels/ops.encoded_matmul (see docs/encoding.md).
+
+The first encoded run searches + folds and caches the artifact bundle under
+src/repro/core/artifacts/serving/; reruns are one load.
 
   PYTHONPATH=src python examples/serve_encoded.py
 """
@@ -10,9 +15,11 @@ import os
 
 env = dict(os.environ)
 env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-for mode in ("fp", "encoded"):
-    print(f"--- mac-mode={mode} ---")
+for mode, extra in (("fp", []),
+                    ("encoded", ["--calib-samples", "64",
+                                 "--calib-refine", "32"])):
+    print(f"--- mac={mode} ---")
     subprocess.run([sys.executable, "-m", "repro.launch.serve",
-                    "--arch", "qwen1.5-0.5b", "--reduced",
-                    "--mac-mode", mode, "--requests", "6",
-                    "--max-new", "8"], env=env, check=True)
+                    "--arch", "qwen1.5-0.5b", "--reduced", "--continuous",
+                    "--mac", mode, "--requests", "6",
+                    "--max-new", "8"] + extra, env=env, check=True)

@@ -1,0 +1,91 @@
+"""Docs CI check: broken intra-repo markdown links + DESIGN.md § references.
+
+Fails (exit 1) when
+
+  1. a markdown file links to a repo-relative target that doesn't exist
+     (``[text](path)`` — http(s)/mailto/pure-anchor links are skipped), or
+  2. any file cites ``DESIGN.md §N`` for a section number that has no
+     matching heading in DESIGN.md (headings declare sections as
+     ``## §N …``).
+
+Run locally:  python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", ".claude",
+             "node_modules", "artifacts"}
+TEXT_EXT = {".py", ".md", ".yml", ".yaml", ".toml", ".txt"}
+
+LINK_RE = re.compile(r"\[[^\]\n]*\]\(([^)\s]+)\)")
+SECREF_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+HEADING_RE = re.compile(r"^#{1,6}\s*§(\d+)\b", re.MULTILINE)
+
+
+def repo_files():
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs if d not in SKIP_DIRS]
+        for f in files:
+            if os.path.splitext(f)[1] in TEXT_EXT:
+                yield os.path.join(root, f)
+
+
+def check_md_links(errors: list) -> None:
+    for path in repo_files():
+        if not path.endswith(".md"):
+            continue
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#")[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(path, REPO)}: broken link "
+                              f"-> {target}")
+
+
+def check_design_refs(errors: list) -> None:
+    design = os.path.join(REPO, "DESIGN.md")
+    if not os.path.exists(design):
+        errors.append("DESIGN.md does not exist but is cited by docstrings")
+        return
+    with open(design, encoding="utf-8") as f:
+        sections = set(HEADING_RE.findall(f.read()))
+    for path in repo_files():
+        if os.path.samefile(path, design):
+            continue
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for n in SECREF_RE.findall(text):
+            if n not in sections:
+                errors.append(f"{os.path.relpath(path, REPO)}: cites "
+                              f"DESIGN.md §{n} but DESIGN.md has no "
+                              f"'## §{n}' heading (has: "
+                              f"{sorted(sections, key=int)})")
+
+
+def main() -> int:
+    errors: list = []
+    check_md_links(errors)
+    check_design_refs(errors)
+    if errors:
+        print(f"docs check FAILED ({len(errors)} problem(s)):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("docs check OK (links + DESIGN.md § references)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

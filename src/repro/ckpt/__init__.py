@@ -1,2 +1,2 @@
 from .checkpoint import save_checkpoint, restore_checkpoint, \
-    async_save_checkpoint, latest_step
+    async_save_checkpoint, latest_step, save_array_tree, load_array_tree

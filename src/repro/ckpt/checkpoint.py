@@ -64,6 +64,54 @@ def async_save_checkpoint(path: str, step: int, tree) -> threading.Thread:
     return t
 
 
+# ---------------------------------------------------------------------------
+# self-describing array trees (serving artifacts — no like_tree at load time)
+# ---------------------------------------------------------------------------
+
+_KEY_SEP = "//"
+
+
+def save_array_tree(path: str, tree: dict) -> str:
+    """Save a nested dict-of-arrays as ONE npz with '//'-joined path keys.
+
+    Unlike the step checkpoints above, the result is self-describing: load
+    needs no ``like_tree`` (the serving artifact cache stores pre-folded
+    encoded-MAC weights whose shapes aren't known before folding).  Writes
+    tmp-then-rename so a crash never leaves a torn artifact.
+    """
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if _KEY_SEP in k:
+                    raise ValueError(f"key {k!r} contains {_KEY_SEP!r}")
+                walk(prefix + [k], v)
+        else:
+            flat[_KEY_SEP.join(prefix)] = np.asarray(node)
+
+    walk([], tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def load_array_tree(path: str) -> dict:
+    """Inverse of save_array_tree: npz → nested dict of numpy arrays."""
+    out: dict = {}
+    with np.load(path) as data:
+        for key in data.files:
+            node = out
+            parts = key.split(_KEY_SEP)
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = data[key]
+    return out
+
+
 def latest_step(path: str) -> Optional[int]:
     if not os.path.isdir(path):
         return None

@@ -88,6 +88,31 @@ def circuit_from_batch(gate_types: np.ndarray, in_idx: np.ndarray, i: int,
                    np.asarray(in_idx[i], np.int32), bits_a, bits_b)
 
 
+def exact_product_circuit(bits_a: int = 4, bits_b: int = 4
+                          ) -> tuple[Circuit, np.ndarray]:
+    """Exact signed-multiplier encoding: one AND2 gate per (a_i, b_j) pair.
+
+    Two's complement gives  a = −2^{ba−1} a_{ba−1} + Σ 2^i a_i, so
+    a·b = Σ_{i,j} w_i w_j (a_i ∧ b_j) with w_i = ±2^i — every monomial is a
+    single AND2 gate and the position weights are the signed bit-weight
+    products.  RMSE is exactly 0 (M = ba·bb wide); used as the zero-error
+    reference encoding in tests and DESIGN.md §1 examples.
+    """
+    wa = [float(1 << i) for i in range(bits_a)]
+    wa[-1] = -wa[-1]
+    wb = [float(1 << j) for j in range(bits_b)]
+    wb[-1] = -wb[-1]
+    gate_types, in_idx, s = [], [], []
+    for i in range(bits_a):
+        for j in range(bits_b):
+            gate_types.append(G.AND2)
+            in_idx.append([i, bits_a + j, i])       # 3rd slot unused by AND2
+            s.append(wa[i] * wb[j])
+    return (Circuit(np.asarray(gate_types, np.int32),
+                    np.asarray(in_idx, np.int32), bits_a, bits_b),
+            np.asarray(s, np.float32))
+
+
 def paper_fig2_circuit() -> tuple[Circuit, np.ndarray]:
     """The 2-bit example of Fig. 2(c): a hand-built 5-bit encoding.
 

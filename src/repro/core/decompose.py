@@ -108,6 +108,17 @@ class BitplaneProgram:
     def n_b_planes(self) -> int:
         return int(self.b_mono_bits.shape[0])
 
+    @property
+    def a_mono_tuples(self) -> tuple:
+        """Activation monomials as variable-arity tuples (1–3 distinct bits).
+
+        ``a_mono_bits`` pads every monomial to 3 shifts by repeating the last
+        bit (AND-idempotent); this strips the padding so the Pallas kernel
+        emits one shift/AND per *distinct* bit (kernels/ops.encoded_matmul
+        accepts either form)."""
+        return tuple(tuple(dict.fromkeys(int(b) for b in row))
+                     for row in self.a_mono_bits)
+
     # ---- runtime pieces (all jittable; s may be a traced array) ------------
 
     def scatter_coeffs(self, s: jnp.ndarray):

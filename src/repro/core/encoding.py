@@ -4,6 +4,13 @@ RMSE (EncodingNet Eq. (1)).
 The position-weight fit  s* = argmin ‖B s − v‖₂  is solved with ridge-damped
 normal equations (duplicate gate outputs make B rank-deficient); the damping
 (1e-6 relative) changes RMSE by <1e-6 and keeps the solve vmappable.
+
+``row_weights`` generalizes the fit to importance-weighted least squares
+(s* = argmin Σ_t w_t (B_t s − v_t)²): the serving calibration driver weights
+truth-table rows by the empirical joint code distribution p(a)·p(b) captured
+from a token stream, so the fitted encoding spends its RMSE budget where the
+task's operands actually live (the Fig-7 task-specific idea, DESIGN.md §3).
+Weighted RMSE is reported in the same units: sqrt(Σ w e² / Σ w).
 """
 from __future__ import annotations
 
@@ -48,14 +55,15 @@ def truth_table_bits(circuit: Circuit) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("bits_a", "bits_b", "chunk"))
 def _fit_batch(gate_types: jnp.ndarray, in_idx: jnp.ndarray,
-               values: jnp.ndarray, bits_a: int, bits_b: int,
-               chunk: int = 8192):
-    """Fit position weights for a batch of circuits.
+               values: jnp.ndarray, row_weights: jnp.ndarray,
+               bits_a: int, bits_b: int, chunk: int = 8192):
+    """Fit position weights for a batch of circuits (weighted least squares).
 
     Args:
-      gate_types: (C, M), in_idx: (C, M, 3), values: (T,) float32.
+      gate_types: (C, M), in_idx: (C, M, 3), values: (T,) float32,
+      row_weights: (T,) float32 (pass all-ones for the unweighted fit).
     Returns:
-      s: (C, M) float32, rmse: (C,) float32.
+      s: (C, M) float32, rmse: (C,) float32 — sqrt(Σ w e² / Σ w).
     """
     rows_np = G.operand_bit_table(bits_a, bits_b)
     T = rows_np.shape[0]
@@ -63,37 +71,49 @@ def _fit_batch(gate_types: jnp.ndarray, in_idx: jnp.ndarray,
     n_chunks = max(1, T // chunk)
     rows = jnp.asarray(rows_np).reshape(n_chunks, -1, bits_a + bits_b)
     vals = values.reshape(n_chunks, -1)
+    wts = row_weights.reshape(n_chunks, -1)
 
     def per_circuit(gt, ii):
         def body(carry, xs):
             Gm, c, vv = carry
-            r, v = xs
+            r, v, w = xs
             B = G.eval_gates(gt, ii, r).astype(jnp.float32)   # (t, M)
-            Gm = Gm + B.T @ B
-            c = c + B.T @ v
-            vv = vv + jnp.sum(v * v)
+            Bw = B * w[:, None]
+            Gm = Gm + B.T @ Bw
+            c = c + Bw.T @ v
+            vv = vv + jnp.sum(w * v * v)
             return (Gm, c, vv), None
 
         init = (jnp.zeros((M, M), jnp.float32), jnp.zeros((M,), jnp.float32),
                 jnp.zeros((), jnp.float32))
-        (Gm, c, vv), _ = jax.lax.scan(body, init, (rows, vals))
+        (Gm, c, vv), _ = jax.lax.scan(body, init, (rows, vals, wts))
         lam = 1e-6 * (jnp.trace(Gm) / M + 1.0)
         s = jnp.linalg.solve(Gm + lam * jnp.eye(M, dtype=jnp.float32), c)
-        # ‖Bs−v‖² = sᵀGs − 2sᵀc + ‖v‖²  (no need to re-stream B)
+        # Σw‖Bs−v‖² = sᵀGs − 2sᵀc + Σw v²  (no need to re-stream B)
         sse = jnp.maximum(s @ Gm @ s - 2.0 * s @ c + vv, 0.0)
-        return s, jnp.sqrt(sse / T)
+        return s, jnp.sqrt(sse / jnp.sum(row_weights))
 
     return jax.vmap(per_circuit)(gate_types, in_idx)
 
 
 def fit_position_weights(gate_types: np.ndarray, in_idx: np.ndarray,
-                         values: np.ndarray, bits_a: int = 8, bits_b: int = 8
+                         values: np.ndarray, bits_a: int = 8, bits_b: int = 8,
+                         row_weights: Optional[np.ndarray] = None
                          ) -> tuple[np.ndarray, np.ndarray]:
-    """Batched least-squares fit — returns (s (C, M), rmse (C,)) as numpy."""
+    """Batched (weighted) least-squares fit — (s (C, M), rmse (C,)) as numpy.
+
+    ``row_weights`` (T,) weights each truth-table row; None ⇒ uniform (the
+    paper's fit).  Weighted RMSE normalizes by Σw, so uniform all-ones
+    weights reproduce the unweighted RMSE exactly.
+    """
     T = 1 << (bits_a + bits_b)
     chunk = min(8192, T)
+    if row_weights is None:
+        w = jnp.ones((T,), jnp.float32)
+    else:
+        w = jnp.asarray(row_weights, jnp.float32)
     s, rmse = _fit_batch(jnp.asarray(gate_types), jnp.asarray(in_idx),
-                         jnp.asarray(values, jnp.float32), bits_a, bits_b,
+                         jnp.asarray(values, jnp.float32), w, bits_a, bits_b,
                          chunk=chunk)
     return np.asarray(s), np.asarray(rmse)
 
@@ -110,10 +130,14 @@ def fit_circuit(circuit: Circuit, values: Optional[np.ndarray] = None
 
 
 def rmse_of(circuit: Circuit, s: np.ndarray,
-            values: Optional[np.ndarray] = None) -> float:
+            values: Optional[np.ndarray] = None,
+            row_weights: Optional[np.ndarray] = None) -> float:
     """Direct RMSE evaluation (independent of the normal-equation path)."""
     if values is None:
         values = G.signed_products(circuit.bits_a, circuit.bits_b)
     B = np.asarray(truth_table_bits(circuit), np.float32)
     err = B @ np.asarray(s, np.float32) - np.asarray(values, np.float32)
-    return float(np.sqrt(np.mean(err ** 2)))
+    if row_weights is None:
+        return float(np.sqrt(np.mean(err ** 2)))
+    w = np.asarray(row_weights, np.float64)
+    return float(np.sqrt(np.sum(w * err.astype(np.float64) ** 2) / w.sum()))

@@ -24,13 +24,40 @@ from .mac import EncodedMac, encoded_matmul_qat
 
 @dataclasses.dataclass(frozen=True)
 class MacConfig:
-    mode: str = "fp"                 # fp | int8 | encoded
+    """MAC-mode configuration shared by every linear layer.
+
+    ``mode``:
+      'fp'            — plain fp matmul.
+      'int8'          — int8 fake-quant QAT simulation.
+      'encoded'       — encoded-MAC forward with STE backward (training; folds
+                        weights on every call).
+      'encoded_infer' — serving path: weights pre-folded once into (U, k, n)
+                        bitplane tensors + bias by
+                        repro.serve.encoded.prepare_encoded_serving, linears
+                        route through kernels/ops.encoded_matmul
+                        (DESIGN.md §3).  Params for this mode are *built* from
+                        fp params, never initialized directly.
+    """
+    mode: str = "fp"                 # fp | int8 | encoded | encoded_infer
     bits: int = 8
     per_layer_s: bool = True         # trainable position weights per layer
     mac: Optional[EncodedMac] = None
+    # serving (encoded_infer): per-projection-family encodings keyed by the
+    # linear's param name ('wq', 'wk', …) and the kernel backend override
+    # ('auto' → pallas on TPU, XLA single-GEMM fold elsewhere).
+    macs: Optional[dict] = None
+    backend: str = "auto"
 
     def with_mode(self, mode: str) -> "MacConfig":
         return dataclasses.replace(self, mode=mode)
+
+    def mac_for(self, name: str) -> EncodedMac:
+        """Projection-family encoding for linear ``name`` (falls back to the
+        shared ``mac``)."""
+        m = (self.macs or {}).get(name, self.mac)
+        if m is None:
+            raise KeyError(f"no encoding for projection family {name!r}")
+        return m
 
 
 def dense_init(key, d_in: int, d_out: int, cfg: MacConfig,

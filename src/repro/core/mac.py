@@ -37,8 +37,10 @@ class EncodedMac:
         return EncodedMac(spec, decompose(spec.circuit))
 
     @staticmethod
-    def load(name: str) -> "EncodedMac":
-        path = os.path.join(_ARTIFACT_DIR, name + ".json")
+    def load(name: str, artifact_dir: Optional[str] = None) -> "EncodedMac":
+        """Load ``<dir>/<name>.json``; ``name`` may contain subdirectories
+        (serving bundles live under ``artifacts/serving/<bundle>/``)."""
+        path = os.path.join(artifact_dir or _ARTIFACT_DIR, name + ".json")
         with open(path) as f:
             d = json.load(f)
         circ = Circuit.from_json(json.dumps(d["circuit"]))
@@ -47,9 +49,10 @@ class EncodedMac:
         return EncodedMac.from_spec(spec)
 
     @staticmethod
-    def save(spec: EncodingSpec, name: str) -> str:
-        os.makedirs(_ARTIFACT_DIR, exist_ok=True)
-        path = os.path.join(_ARTIFACT_DIR, name + ".json")
+    def save(spec: EncodingSpec, name: str,
+             artifact_dir: Optional[str] = None) -> str:
+        path = os.path.join(artifact_dir or _ARTIFACT_DIR, name + ".json")
+        os.makedirs(os.path.dirname(path), exist_ok=True)
         with open(path, "w") as f:
             json.dump({"circuit": json.loads(spec.circuit.to_json()),
                        "s": np.asarray(spec.s, np.float32).tolist(),
@@ -125,7 +128,7 @@ def encoded_matmul_infer(x: jnp.ndarray, folded, scale_x: jnp.ndarray,
     xc = quantize_codes(x, scale_x, bits)
     if use_pallas:
         from repro.kernels.ops import encoded_matmul as pallas_op
-        out = pallas_op(xc, Wt, bias, np.asarray(program.a_mono_bits))
+        out = pallas_op(xc, Wt, bias, program.a_mono_tuples)
     else:
         A = program.planes(xc, "a").astype(jnp.bfloat16)
         out = jnp.einsum("umk,ukn->mn", A, Wt.astype(jnp.bfloat16),

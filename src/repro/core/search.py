@@ -38,12 +38,16 @@ def random_search(seed: int, m_bits: int, n_samples: int = 10_000,
                   bits_a: int = 8, bits_b: int = 8,
                   values: Optional[np.ndarray] = None,
                   batch: int = 64, mixed_only: bool = False,
-                  rel_tol: float = 1e-3, patience: int = 2000) -> SearchResult:
+                  rel_tol: float = 1e-3, patience: int = 2000,
+                  row_weights: Optional[np.ndarray] = None) -> SearchResult:
     """Random circuit sampling with early stop once best-RMSE is stable.
 
     Early stop mirrors the paper ("when the RMSE becomes stable, we stop"):
     if the best RMSE improved by < ``rel_tol`` (relative) over the last
     ``patience`` samples, sampling halts.
+
+    ``row_weights`` (T,) makes every fit importance-weighted (task-specific
+    serving calibration, DESIGN.md §3); reported RMSEs are then weighted.
     """
     rng = np.random.default_rng(seed)
     vals = _values_or_default(values, bits_a, bits_b)
@@ -56,7 +60,8 @@ def random_search(seed: int, m_bits: int, n_samples: int = 10_000,
     while done < n_samples:
         n = min(batch, n_samples - done)
         gt, ii = sample_circuits(rng, n, m_bits, bits_a, bits_b, mixed_only)
-        s, rmse = fit_position_weights(gt, ii, vals, bits_a, bits_b)
+        s, rmse = fit_position_weights(gt, ii, vals, bits_a, bits_b,
+                                       row_weights=row_weights)
         for i in range(n):
             if rmse[i] < best_rmse:
                 best_rmse = float(rmse[i])
@@ -73,7 +78,8 @@ def random_search(seed: int, m_bits: int, n_samples: int = 10_000,
 
 
 def anneal(spec: EncodingSpec, seed: int, iters: int = 2000,
-           temp0: float = 0.0, batch: int = 64) -> SearchResult:
+           temp0: float = 0.0, batch: int = 64,
+           row_weights: Optional[np.ndarray] = None) -> SearchResult:
     """Local refinement: mutate one random gate (type + wiring) per candidate.
 
     ``temp0 == 0`` is greedy hill-climbing; ``temp0 > 0`` gives simulated
@@ -100,7 +106,8 @@ def anneal(spec: EncodingSpec, seed: int, iters: int = 2000,
         rows = rng.integers(0, M, size=n)
         gt[np.arange(n), rows] = rng.integers(0, G.N_GATE_TYPES, size=n)
         ii[np.arange(n), rows] = rng.integers(0, n_in, size=(n, 3))
-        s, rmse = fit_position_weights(gt, ii, vals, bits_a, bits_b)
+        s, rmse = fit_position_weights(gt, ii, vals, bits_a, bits_b,
+                                       row_weights=row_weights)
         j = int(np.argmin(rmse))
         t = temp0 * max(0.0, 1.0 - done / max(1, iters))
         accept = rmse[j] < cur_rmse or (

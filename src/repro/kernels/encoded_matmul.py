@@ -33,8 +33,13 @@ def _kernel(x_ref, w_ref, b_ref, o_ref, *, mono_bits, n_k_blocks):
 
     x = x_ref[...].astype(jnp.int32)                     # (bm, bk)
     acc = jnp.zeros(o_ref.shape, jnp.float32)
-    for u, (s0, s1, s2) in enumerate(mono_bits):         # static unroll (U)
-        plane = ((x >> s0) & (x >> s1) & (x >> s2) & 1).astype(jnp.bfloat16)
+    for u, shifts in enumerate(mono_bits):               # static unroll (U)
+        # variable-arity monomial: one shift/AND per distinct operand bit
+        # (1-input IN/NOT gates and 2-input gates need no dummy shifts)
+        word = x >> shifts[0]
+        for s in shifts[1:]:
+            word = word & (x >> s)
+        plane = (word & 1).astype(jnp.bfloat16)
         acc += jnp.dot(plane, w_ref[u],                  # MXU, f32 accum
                        preferred_element_type=jnp.float32)
     o_ref[...] += acc
@@ -52,9 +57,10 @@ def encoded_matmul_pallas(x_codes: jnp.ndarray, wt: jnp.ndarray,
                           interpret: bool = False) -> jnp.ndarray:
     """x_codes (m,k) int8, wt (U,k,n) bf16/f32, bias (n,) → (m,n) f32.
 
-    ``mono_bits``: tuple of (s0,s1,s2) shift triples — static (baked into the
-    kernel as an unrolled loop).  Caller pads shapes to block multiples
-    (see ops.encoded_matmul).
+    ``mono_bits``: tuple of per-monomial shift tuples, each 1–3 distinct bit
+    positions — static (baked into the kernel as an unrolled loop; arity
+    sets the shift/AND count, so low-arity gates cost fewer VPU ops).
+    Caller pads shapes to block multiples (see ops.encoded_matmul).
     """
     m, k = x_codes.shape
     u, k2, n = wt.shape

@@ -25,27 +25,51 @@ def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
+def _norm_monos(mono_bits) -> tuple:
+    """Normalize monomials to variable-arity tuples of distinct shifts.
+
+    Accepts the padded ``(U, 3)`` array form (BitplaneProgram.a_mono_bits —
+    padding repeats the last bit, AND-idempotent) or already-variable
+    sequences of 1–3 bit positions; order within a monomial is preserved.
+    """
+    out = []
+    for row in mono_bits:
+        shifts = tuple(dict.fromkeys(int(b) for b in np.atleast_1d(row)))
+        if not 1 <= len(shifts) <= 3:
+            raise ValueError(f"monomial needs 1–3 distinct bits, got {row!r}")
+        out.append(shifts)
+    return tuple(out)
+
+
+def _pad3(monos: tuple) -> np.ndarray:
+    """(U, 3) int32 padded form (repeat last bit) for the vectorized paths."""
+    return np.asarray([(m + (m[-1],) * 3)[:3] for m in monos], np.int32
+                      ).reshape(-1, 3)
+
+
 def encoded_matmul(x_codes: jnp.ndarray, wt: jnp.ndarray, bias: jnp.ndarray,
-                   mono_bits: np.ndarray, backend: str = "auto",
+                   mono_bits, backend: str = "auto",
                    bm: int = 128, bn: int = 128, bk: int = 128
                    ) -> jnp.ndarray:
     """Encoded matmul with pre-folded weights. Pads, dispatches, slices.
 
     x_codes (m,k) int8 · wt (U,k,n) · bias (n,) → (m,n) f32.
+    ``mono_bits``: (U, 3) padded array or sequence of 1–3-bit monomial
+    tuples (see _norm_monos).
     """
     m, k = x_codes.shape
     n = wt.shape[2]
+    mono = _norm_monos(mono_bits)
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "xla"
     if backend == "xla":
-        A = planes_ref(x_codes, mono_bits).astype(jnp.bfloat16)
+        A = planes_ref(x_codes, _pad3(mono)).astype(jnp.bfloat16)
         return jnp.einsum("umk,ukn->mn", A, wt.astype(jnp.bfloat16),
                           preferred_element_type=jnp.float32) + bias
     interpret = backend == "pallas_interpret" or jax.default_backend() != "tpu"
     xp = _pad_to(_pad_to(x_codes, bm, 0), bk, 1)
     wp = _pad_to(_pad_to(wt, bk, 1), bn, 2)
     bp = _pad_to(bias, bn, 0)
-    mono = tuple(tuple(int(b) for b in row) for row in np.asarray(mono_bits))
     out = encoded_matmul_pallas(xp, wp, bp, mono, bm=bm, bn=bn, bk=bk,
                                 interpret=interpret)
     return out[:m, :n]

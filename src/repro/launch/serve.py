@@ -3,11 +3,24 @@ with the paper's encoded-MAC inference mode.
 
   # static batch (dense KV cache):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
-      --mac-mode encoded --requests 8
+      --requests 8
 
   # continuous batching (paged KV cache + scheduler):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
       --continuous --slots 4 --page-size 16 --n-pages 256 --requests 16
+
+  # calibrated encoded-MAC serving (calibrate → search → fold → serve; the
+  # fitted encodings + folded weights are cached under
+  # src/repro/core/artifacts/serving/ so later starts are one load):
+  PYTHONPATH=src python -m repro.launch.serve --reduced --continuous \
+      --mac encoded
+
+``--mac encoded`` routes every calibrated projection through
+kernels/ops.encoded_matmul with per-projection-family encodings and
+pre-folded (U, k, n) bitplane weights (DESIGN.md §3, docs/encoding.md).
+``--mac int8`` keeps the fake-quant QAT simulation; ``--encoding exact``
+swaps the searched encodings for the bit-exact AND-plane circuit (debug /
+agreement demos).
 """
 from __future__ import annotations
 
@@ -20,8 +33,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--mac-mode", default="fp",
-                    choices=["fp", "int8", "encoded"])
+    ap.add_argument("--mac", "--mac-mode", dest="mac", default="fp",
+                    choices=["fp", "int8", "encoded"],
+                    help="MAC mode (encoded = calibrated encoded-MAC "
+                         "serving with pre-folded weights)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--continuous", action="store_true",
@@ -31,24 +46,63 @@ def main():
     ap.add_argument("--n-pages", type=int, default=256)
     ap.add_argument("--reserve", default="conservative",
                     choices=["conservative", "optimistic"])
+    # encoded-serving knobs (ignored unless --mac encoded)
+    ap.add_argument("--encoding", default="search",
+                    choices=["search", "exact"],
+                    help="search = task-specific per-family search (paper); "
+                         "exact = bit-exact AND-plane circuit (debug)")
+    ap.add_argument("--encoded-backend", default="auto",
+                    choices=["auto", "xla", "pallas", "pallas_interpret"])
+    ap.add_argument("--m-bits", type=int, default=48,
+                    help="encoding output width M per family")
+    ap.add_argument("--calib-samples", type=int, default=128,
+                    help="random-search samples per family")
+    ap.add_argument("--calib-refine", type=int, default=64,
+                    help="anneal refinement iters per family")
+    ap.add_argument("--calib-batches", type=int, default=4)
+    ap.add_argument("--force-calib", action="store_true",
+                    help="rebuild the artifact bundle even if cached")
     args = ap.parse_args()
 
     import numpy as np
     import jax
     from repro.configs import get_config
     from repro.core.layers import MacConfig
-    from repro.core.mac import EncodedMac
     from repro.models import init_model
-    from repro.serve import Engine, ServeEngine
+    from repro.serve import Engine, ServeEngine, prepare_encoded_serving
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    if args.mac_mode != "fp":
-        mac = EncodedMac.default() if args.mac_mode == "encoded" else None
-        cfg = dataclasses.replace(cfg, mac=MacConfig(mode=args.mac_mode,
-                                                     mac=mac))
+    elif args.mac == "encoded" and jax.default_backend() == "cpu":
+        # folded bitplane weights are U× the dense weight bytes — a
+        # production-sized config would not fit host memory, so the CPU
+        # (interpret/XLA) path always serves the reduced shape
+        print(f"[encoded-serving] CPU backend: using {args.arch}.reduced() "
+              "(pass --reduced to silence)")
+        cfg = cfg.reduced()
+    if args.mac == "int8":
+        cfg = dataclasses.replace(cfg, mac=MacConfig(mode="int8"))
     params = init_model(jax.random.PRNGKey(0), cfg)
+
+    if args.mac == "encoded":
+        overrides = None
+        if args.encoding == "exact":
+            from repro.core.circuits import exact_product_circuit
+            from repro.core.encoding import EncodingSpec
+            from repro.core.mac import EncodedMac
+            circ, s = exact_product_circuit(cfg.mac.bits, cfg.mac.bits)
+            mac = EncodedMac.from_spec(EncodingSpec(circ, s, 0.0))
+            overrides = {n: mac for n in ("wq", "wk", "wv", "wo",
+                                          "wi", "wg", "w")}
+        t0 = time.time()
+        params, cfg, info = prepare_encoded_serving(
+            params, cfg, m_bits=args.m_bits, n_samples=args.calib_samples,
+            refine=args.calib_refine, calib_batches=args.calib_batches,
+            backend=args.encoded_backend, macs_override=overrides,
+            force=args.force_calib)
+        print(f"[encoded-serving] ready in {time.time() - t0:.1f}s "
+              f"({'cache hit' if info['loaded'] else 'searched+folded'})")
 
     rng = np.random.default_rng(0)
     reqs = [rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
@@ -65,7 +119,7 @@ def main():
         st = engine.stats()
         total = st["decode_tokens"]
         print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
-              f"({total / dt:.1f} tok/s, mac={args.mac_mode}, continuous)")
+              f"({total / dt:.1f} tok/s, mac={args.mac}, continuous)")
         print(f"  occupancy={st['occupancy']:.2f} "
               f"evictions={st['evictions']} "
               f"p50={st['latency_p50_s']:.3f}s p99={st['latency_p99_s']:.3f}s "
@@ -80,7 +134,7 @@ def main():
     dt = time.time() - t0
     total = sum(args.max_new for _ in reqs)
     print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
-          f"({total / dt:.1f} tok/s, mac={args.mac_mode}, static)")
+          f"({total / dt:.1f} tok/s, mac={args.mac}, static)")
     for i, o in enumerate(outs[:3]):
         print(f"req{i}: {list(map(int, o[:10]))} ...")
 

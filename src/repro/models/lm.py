@@ -51,6 +51,13 @@ def _stages(cfg):
 
 
 def init_model(key, cfg):
+    if cfg.mac.mode == "encoded_infer":
+        # serving-only mode: params carry pre-folded (U, k, n) bitplane
+        # tensors derived from calibrated fp params — build them with
+        # repro.serve.encoded.prepare_encoded_serving (DESIGN.md §3)
+        raise ValueError(
+            "init_model cannot initialize mac mode 'encoded_infer'; init in "
+            "'fp' mode and transform via serve.encoded.prepare_encoded_serving")
     if cfg.family == "encdec":
         from .encdec import init_encdec
         return init_encdec(key, cfg)
@@ -349,6 +356,9 @@ def apply_model(params, cfg, tokens, *, img=None, enc_x=None, cache=None,
 
 
 def _head(params, cfg, h):
+    # tied heads read the embedding table and stay fp in every MAC mode; an
+    # untied lm_head is a normal 'w' linear, so under 'encoded_infer' it
+    # routes through the folded encoded matmul like any other projection
     if cfg.tie_embeddings:
         logits = mm(h, params["embed"]["table"].T, cfg.cdtype)
     else:

@@ -11,7 +11,21 @@ import jax.numpy as jnp
 
 from repro.core.layers import MacConfig
 from repro.core.mac import encoded_matmul_qat
-from repro.quant.uniform import fake_quant, calibrate_scale
+from repro.quant.uniform import fake_quant, calibrate_scale, quantize_codes
+
+
+# Serving-calibration hook (DESIGN.md §3): when set, ``linear`` reports every
+# call as (name, weight, input) before computing.  Installed only by the
+# eager, unrolled calibration forward (repro.serve.encoded) — the plain None
+# check is free on the jitted paths.
+_ACT_RECORDER = None
+
+
+def set_activation_recorder(fn):
+    """Install/remove the calibration recorder; returns the previous hook."""
+    global _ACT_RECORDER
+    prev, _ACT_RECORDER = _ACT_RECORDER, fn
+    return prev
 
 
 def mm(x: jnp.ndarray, w: jnp.ndarray, compute_dtype) -> jnp.ndarray:
@@ -31,6 +45,10 @@ def mm(x: jnp.ndarray, w: jnp.ndarray, compute_dtype) -> jnp.ndarray:
 def linear_init(key, d_in: int, d_out: int, name: str, mcfg: MacConfig,
                 bias: bool = False, dtype=jnp.float32, scale: float = None
                 ) -> dict:
+    if mcfg.mode == "encoded_infer":
+        raise ValueError(
+            "'encoded_infer' params are built from fp params by "
+            "repro.serve.encoded.prepare_encoded_serving, not initialized")
     std = scale if scale is not None else 1.0 / np.sqrt(d_in)
     p = {name: (jax.random.normal(key, (d_in, d_out), jnp.float32)
                 * std).astype(dtype)}
@@ -45,9 +63,30 @@ def linear_init(key, d_in: int, d_out: int, name: str, mcfg: MacConfig,
 
 def linear(p: dict, name: str, x: jnp.ndarray, mcfg: MacConfig,
            compute_dtype=jnp.float32) -> jnp.ndarray:
-    """Apply a named linear under the configured MAC mode."""
+    """Apply a named linear under the configured MAC mode.
+
+    'encoded_infer' (serving) routes through kernels/ops.encoded_matmul with
+    the weights pre-folded into ``name_fw``/``name_fb`` bitplane tensors;
+    linears without folded tensors (un-calibrated families, e.g. vmapped MoE
+    experts) fall back to the fp matmul — the gate is per-layer, not global.
+    """
     w = p[name]
-    if mcfg.mode == "fp":
+    if _ACT_RECORDER is not None:
+        _ACT_RECORDER(name, w, x)
+    if mcfg.mode == "encoded_infer":
+        if name + "_fw" not in p:
+            out = mm(x, w, compute_dtype)
+        else:
+            from repro.kernels.ops import encoded_matmul
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+            sa, sw = p[name + "_as"], p[name + "_ws"]
+            xc = quantize_codes(x2, sa, mcfg.bits)
+            out = encoded_matmul(xc, p[name + "_fw"], p[name + "_fb"],
+                                 mcfg.mac_for(name).program.a_mono_tuples,
+                                 backend=mcfg.backend)
+            out = (out * (sa * sw)).reshape(*lead, -1).astype(compute_dtype)
+    elif mcfg.mode == "fp":
         out = mm(x, w, compute_dtype)
     else:
         lead = x.shape[:-1]

@@ -5,6 +5,7 @@ keeps the product table symmetric as in the paper's MAC-array usage).
 """
 from __future__ import annotations
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -56,6 +57,24 @@ def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, bits: int = 8
     """Quantize-dequantize with straight-through gradients (QAT)."""
     q = jnp.clip(_ste_round(x / scale), -qmax(bits), qmax(bits))
     return q * scale
+
+
+def code_histogram(values, scale, bits: int = 8):
+    """Empirical code distribution of ``values`` quantized at ``scale``.
+
+    Returns a (2^bits,) float64 numpy histogram indexed by the RAW
+    two's-complement bit pattern (code & (2^bits − 1)) — the same index
+    order as core.gates.operand_bit_table rows — normalized to sum to 1.
+    Used by the serving calibration driver to weight the encoding fit by
+    where the task's operands actually land (DESIGN.md §3).
+    """
+    m = qmax(bits)
+    codes = np.clip(np.round(np.asarray(values, np.float64)
+                             / float(np.asarray(scale))), -m, m
+                    ).astype(np.int64)
+    raw = codes & ((1 << bits) - 1)
+    hist = np.bincount(raw.ravel(), minlength=1 << bits).astype(np.float64)
+    return hist / max(hist.sum(), 1.0)
 
 
 def uniform_levels(bits: int = 8) -> jnp.ndarray:

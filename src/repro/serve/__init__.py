@@ -3,3 +3,6 @@ from .engine import (make_prefill, make_decode_step, make_paged_prefill,
 from .paged_cache import PageAllocator, PagedKVCache, pages_for
 from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
                         FINISHED, EVICTED)
+from .encoded import (prepare_encoded_serving, capture_activation_stats,
+                      family_row_weights, search_family_encodings,
+                      fold_linear_params)

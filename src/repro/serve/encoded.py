@@ -1,0 +1,422 @@
+"""Calibrated encoded-MAC serving: the calibrate → search → fold → serve
+pipeline (DESIGN.md §3, docs/encoding.md).
+
+The paper's encoding-based MAC replaces every multiplier with simple logic
+plus a bit-wise weighted accumulation; PR 1's serving engine still executed
+projections as dense matmuls.  This module closes that gap:
+
+ 1. **capture** — run a short synthetic token stream through the fp model
+    *eagerly* (``scan_layers=False``, ``remat=False``) with a recorder hook
+    in ``repro.nn.common.linear``; per linear call we log the activation
+    max-abs and a value subsample, keyed by a content hash of the layer's
+    weight slice (order-independent ↔ exact per-layer matching back into
+    the stacked param trees).
+ 2. **search** — per projection family (the linear's param name: 'wq',
+    'wk', 'wv', 'wo', 'wi', 'wg', …) run the paper's random search plus
+    annealed refinement (core/search.py), with every least-squares fit
+    weighted by the empirical joint code distribution p(a)·p(b) from the
+    calibration stream — the task-specific encoding idea of Fig 7.
+ 3. **fold** — quantize weights per layer, fold circuit + position weights
+    + weight bit-planes into ``(U, k, n)`` tensors and a bias once
+    (core/decompose.fold_weights), and graft ``name_fw/fb/as/ws`` leaves
+    onto the param tree.  At serve time ``nn.common.linear`` routes through
+    ``kernels/ops.encoded_matmul`` (mac mode 'encoded_infer').
+ 4. **cache** — the fitted encodings and folded weights are a versioned
+    artifact bundle under ``core/artifacts/serving/<arch>-<key>/`` (via
+    ``ckpt.save_array_tree``), so engine start-up is one load, not a search.
+
+Families whose layers never produce a concrete record (e.g. vmapped MoE
+expert linears) are simply not folded — those layers keep the fp matmul.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import gates as G
+from repro.core.layers import MacConfig
+from repro.core.mac import EncodedMac, _ARTIFACT_DIR
+from repro.core.search import random_search, anneal
+from repro.data.synthetic import SyntheticLMDataset
+from repro.models import apply_model
+from repro.nn.common import set_activation_recorder
+from repro.quant.uniform import calibrate_scale, quantize_codes, \
+    code_histogram, qmax
+from repro.ckpt import save_array_tree, load_array_tree
+
+ARTIFACT_VERSION = 1
+DEFAULT_CACHE_DIR = os.path.join(_ARTIFACT_DIR, "serving")
+
+
+# ---------------------------------------------------------------------------
+# 1. capture
+# ---------------------------------------------------------------------------
+
+def _whash(w) -> bytes:
+    a = np.ascontiguousarray(np.asarray(w, np.float32))
+    return hashlib.sha1(a.tobytes()).digest()
+
+
+@dataclasses.dataclass
+class CalibStats:
+    """Per-call-site activation statistics from the calibration stream."""
+    name: dict          # weight-hash -> linear name (projection family)
+    amax: dict          # weight-hash -> max |x| over the stream
+    samples: dict       # weight-hash -> list of subsampled activation values
+    n_tokens: int = 0
+
+
+def capture_activation_stats(params, cfg, *, n_batches: int = 4,
+                             batch_size: int = 4, seq_len: int = 64,
+                             seed: int = 0,
+                             max_samples_per_call: int = 2048) -> CalibStats:
+    """Run the calibration stream and record per-linear activation stats.
+
+    The forward runs in fp mode, eagerly and fully unrolled, so the recorder
+    sees concrete values; calls that only ever see tracers (vmapped expert
+    linears) are skipped and their layers later fall back to fp serving.
+    """
+    calib_cfg = dataclasses.replace(cfg, scan_layers=False, remat=False,
+                                    mac=MacConfig(mode="fp"))
+    data = SyntheticLMDataset(cfg.vocab_size, seq_len, seed=seed)
+    stats = CalibStats(name={}, amax={}, samples={})
+
+    def hook(name, w, x):
+        if isinstance(w, jax.core.Tracer) or isinstance(x, jax.core.Tracer):
+            return
+        key = _whash(w)
+        prev = stats.name.get(key)
+        if prev is not None and prev != name:
+            raise ValueError(f"weight hash collision: {prev!r} vs {name!r}")
+        xa = np.asarray(x, np.float32).reshape(-1)
+        stats.name[key] = name
+        stats.amax[key] = max(stats.amax.get(key, 0.0), float(np.abs(xa).max()))
+        stride = max(1, xa.size // max_samples_per_call)
+        stats.samples.setdefault(key, []).append(xa[::stride].copy())
+
+    prev_hook = set_activation_recorder(hook)
+    try:
+        for step in range(n_batches):
+            tokens = jnp.asarray(data.batch(step, batch_size)["tokens"])
+            apply_model(params, calib_cfg, tokens)
+            stats.n_tokens += int(tokens.size)
+    finally:
+        set_activation_recorder(prev_hook)
+    return stats
+
+
+def _match_linears(params, stats: CalibStats):
+    """Map recorded call sites back into the param tree.
+
+    Returns {(path, name): {"stacked": bool, "amax": (L,)|() array}} where
+    ``path`` is the tuple of dict keys leading to the dict that holds the
+    weight leaf; stacked leaves (L, k, n) are matched per layer slice.
+    """
+    matched = {}
+    claimed = set()
+
+    def visit(path, node):
+        if not isinstance(node, dict):
+            return
+        for k, v in node.items():
+            if isinstance(v, dict):
+                visit(path + (k,), v)
+                continue
+            a = np.asarray(v)
+            if a.ndim == 2:
+                h = _whash(a)
+                if stats.name.get(h) == k and h not in claimed:
+                    claimed.add(h)
+                    matched[(path, k)] = {"stacked": False,
+                                          "amax": np.float32(stats.amax[h]),
+                                          "hashes": [h]}
+            elif a.ndim == 3:
+                hs = [_whash(a[i]) for i in range(a.shape[0])]
+                if all(stats.name.get(h) == k and h not in claimed
+                       for h in hs):
+                    claimed.update(hs)
+                    matched[(path, k)] = {
+                        "stacked": True,
+                        "amax": np.asarray([stats.amax[h] for h in hs],
+                                           np.float32),
+                        "hashes": hs}
+
+    visit((), params)
+    return matched
+
+
+def _leaf(params, path, name):
+    """Weight leaf at a matched (path, name) as float32 numpy."""
+    node = params
+    for p in path:
+        node = node[p]
+    return np.asarray(node[name], np.float32)
+
+
+# ---------------------------------------------------------------------------
+# 2. task-specific per-family search
+# ---------------------------------------------------------------------------
+
+def family_row_weights(params, matched, stats: CalibStats, bits: int,
+                       blend: float = 0.5) -> dict:
+    """Per-family (T,) truth-table row weights from the empirical joint
+    code distribution p(a)·p(b), blended with uniform for coverage.
+
+    Rows follow core.gates.operand_bit_table order (a-major over raw
+    two's-complement patterns); mean weight ≈ 1 so Gram conditioning and
+    RMSE magnitudes stay comparable to the unweighted fit.
+    """
+    fam_a: dict = {}
+    fam_w: dict = {}
+
+    for (path, name), m in matched.items():
+        w = _leaf(params, path, name)
+        layers = range(w.shape[0]) if m["stacked"] else [None]
+        for li, h in zip(layers, m["hashes"]):
+            wl = w if li is None else w[li]
+            sw = float(np.asarray(calibrate_scale(jnp.asarray(wl), bits)))
+            fam_w[name] = fam_w.get(name, 0.0) + \
+                code_histogram(wl, sw, bits)
+            sa = max(stats.amax[h], 1e-8) / qmax(bits)
+            xs = np.concatenate(stats.samples[h])
+            fam_a[name] = fam_a.get(name, 0.0) + \
+                code_histogram(xs, sa, bits)
+
+    out = {}
+    T = 1 << (2 * bits)
+    for name in fam_a:
+        pa = fam_a[name] / fam_a[name].sum()
+        pb = fam_w[name] / fam_w[name].sum()
+        emp = np.outer(pa, pb).reshape(-1)
+        out[name] = (blend * emp * T + (1.0 - blend)).astype(np.float32)
+    return out
+
+
+def search_family_encodings(row_weights: dict, bits: int, m_bits,
+                            n_samples: int = 128, refine: int = 64,
+                            seed: int = 0, verbose: bool = False) -> dict:
+    """Random+anneal encoding search per projection family.
+
+    ``m_bits``: output width M — an int, or a {family: M} dict for
+    per-family widths (Fig 7's task-specific M).
+    """
+    macs = {}
+    for i, name in enumerate(sorted(row_weights)):
+        mb = m_bits[name] if isinstance(m_bits, dict) else m_bits
+        res = random_search(seed + 101 * i, mb, n_samples, bits, bits,
+                            row_weights=row_weights[name],
+                            patience=max(n_samples, 1))
+        if refine:
+            res = anneal(res.spec, seed + 101 * i + 7919, refine,
+                         row_weights=row_weights[name])
+        macs[name] = EncodedMac.from_spec(res.spec)
+        if verbose:
+            print(f"  [{name}] M={mb} weighted-rmse={res.spec.rmse:.3f} "
+                  f"U={macs[name].program.n_a_planes}")
+    return macs
+
+
+# ---------------------------------------------------------------------------
+# 3. fold
+# ---------------------------------------------------------------------------
+
+def fold_linear_params(params, matched, macs: dict, bits: int) -> dict:
+    """Build the folded-leaf delta tree: for every matched linear,
+    ``name_fw (U,k,n)``, ``name_fb (n,)``, ``name_as``, ``name_ws``
+    (stacked along the layer dim where the source weight is stacked)."""
+    delta: dict = {}
+
+    def slot(path):
+        node = delta
+        for p in path:
+            node = node.setdefault(p, {})
+        return node
+
+    for (path, name), m in matched.items():
+        if name not in macs:
+            continue
+        mac = macs[name]
+        s = jnp.asarray(mac.spec.s)
+        w = _leaf(params, path, name)
+        layers = [w] if not m["stacked"] else [w[i] for i in range(w.shape[0])]
+        fw, fb, ws = [], [], []
+        for wl in layers:
+            sw = float(np.asarray(calibrate_scale(jnp.asarray(wl), bits)))
+            wc = quantize_codes(jnp.asarray(wl), sw, bits)
+            Wt, b = mac.program.fold_weights(wc, s)
+            fw.append(np.asarray(Wt, np.float32))
+            fb.append(np.asarray(b, np.float32))
+            ws.append(np.float32(sw))
+        node = slot(path)
+        qm = np.float32(qmax(bits))
+        if m["stacked"]:
+            node[name + "_fw"] = np.stack(fw)
+            node[name + "_fb"] = np.stack(fb)
+            node[name + "_ws"] = np.asarray(ws, np.float32)
+            node[name + "_as"] = np.maximum(m["amax"], 1e-8) / qm
+        else:
+            node[name + "_fw"] = fw[0]
+            node[name + "_fb"] = fb[0]
+            node[name + "_ws"] = ws[0]
+            node[name + "_as"] = np.float32(max(float(m["amax"]), 1e-8) / qm)
+    return delta
+
+
+def _merge(params, delta):
+    out = dict(params)
+    for k, v in delta.items():
+        if isinstance(v, dict) and isinstance(out.get(k), dict):
+            out[k] = _merge(out[k], v)
+        else:
+            out[k] = jnp.asarray(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 4. versioned artifact bundle
+# ---------------------------------------------------------------------------
+
+def _params_fingerprint(params) -> str:
+    h = hashlib.sha1()
+    leaves, _ = jax.tree_util.tree_flatten(params)
+    for leaf in leaves:
+        a = np.ascontiguousarray(np.asarray(leaf))
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _macs_fingerprint(macs: dict) -> str:
+    h = hashlib.sha1()
+    for name in sorted(macs):
+        h.update(name.encode())
+        h.update(macs[name].spec.circuit.to_json().encode())
+        h.update(np.asarray(macs[name].spec.s, np.float32).tobytes())
+    return h.hexdigest()
+
+
+def _bundle_key(cfg, params, opts: dict) -> str:
+    ident = dict(opts)
+    ident.update(version=ARTIFACT_VERSION, arch=cfg.arch,
+                 n_layers=cfg.n_layers, d_model=cfg.d_model,
+                 params=_params_fingerprint(params))
+    blob = json.dumps(ident, sort_keys=True, default=str)
+    return hashlib.sha1(blob.encode()).hexdigest()[:12]
+
+
+def prepare_encoded_serving(params, cfg, *, m_bits=48, n_samples: int = 128,
+                            refine: int = 64, seed: int = 0,
+                            calib_batches: int = 4, calib_batch_size: int = 4,
+                            calib_seq: int = 64, blend: float = 0.5,
+                            backend: str = "auto",
+                            cache_dir: Optional[str] = None,
+                            macs_override: Optional[dict] = None,
+                            force: bool = False, verbose: bool = True):
+    """Engine build-time entry point: fp params → encoded-serving params.
+
+    Returns ``(params_enc, cfg_enc, info)`` where ``cfg_enc.mac`` is an
+    'encoded_infer' MacConfig carrying the per-family encodings, and
+    ``params_enc`` additionally holds the pre-folded bitplane tensors.
+    First call searches + folds and writes the artifact bundle; later calls
+    with identical inputs load it (``info['loaded']``).
+
+    ``macs_override``: {family: EncodedMac} — skip the search and fold with
+    the given encodings (tests / externally searched encodings).
+    """
+    bits = cfg.mac.bits
+    cache_dir = cache_dir or DEFAULT_CACHE_DIR
+    opts = dict(bits=bits, m_bits=m_bits, n_samples=n_samples, refine=refine,
+                seed=seed, calib_batches=calib_batches,
+                calib_batch_size=calib_batch_size, calib_seq=calib_seq,
+                blend=blend)
+    if macs_override is not None:
+        opts["override"] = _macs_fingerprint(macs_override)
+    key = _bundle_key(cfg, params, opts)
+    bundle = os.path.join(cache_dir, f"{cfg.arch}-{key}")
+    manifest_path = os.path.join(bundle, "manifest.json")
+
+    loaded = False
+    if not force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+            if manifest.get("version") == ARTIFACT_VERSION \
+                    and manifest.get("key") == key:
+                macs = {name: EncodedMac.load(f"enc_{name}",
+                                              artifact_dir=bundle)
+                        for name in manifest["families"]}
+                delta = load_array_tree(os.path.join(bundle, "folded.npz"))
+                loaded = True
+        except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+            if verbose:
+                print(f"[encoded-serving] unreadable bundle {bundle} "
+                      f"({e!r}) — rebuilding")
+
+    if not loaded:
+        if verbose:
+            print(f"[encoded-serving] calibrating "
+                  f"({calib_batches}×{calib_batch_size}×{calib_seq} tokens)…")
+        stats = capture_activation_stats(
+            params, cfg, n_batches=calib_batches,
+            batch_size=calib_batch_size, seq_len=calib_seq, seed=seed)
+        matched = _match_linears(params, stats)
+        if not matched:
+            raise ValueError("calibration recorded no linear layers "
+                             "(unsupported architecture for encoded serving)")
+        if macs_override is not None:
+            macs = dict(macs_override)
+        else:
+            rw = family_row_weights(params, matched, stats, bits, blend)
+            if verbose:
+                print(f"[encoded-serving] searching encodings for "
+                      f"{len(rw)} projection families…")
+            macs = search_family_encodings(rw, bits, m_bits, n_samples,
+                                           refine, seed, verbose=verbose)
+        delta = fold_linear_params(params, matched, macs, bits)
+        os.makedirs(bundle, exist_ok=True)
+        for name, mac in macs.items():
+            EncodedMac.save(mac.spec, f"enc_{name}", artifact_dir=bundle)
+        save_array_tree(os.path.join(bundle, "folded.npz"), delta)
+        manifest = {
+            "version": ARTIFACT_VERSION, "key": key, "arch": cfg.arch,
+            "opts": {k: v for k, v in opts.items()},
+            "families": {name: {"rmse": float(mac.spec.rmse),
+                                "m_bits": int(mac.spec.m_bits),
+                                "n_a_planes": mac.program.n_a_planes}
+                         for name, mac in macs.items()},
+        }
+        # manifest last + atomically: it gates loading, so a crash anywhere
+        # above leaves no readable manifest and the next start rebuilds
+        tmp = manifest_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+        os.replace(tmp, manifest_path)
+
+    params_enc = _merge(params, delta)
+    cfg_enc = dataclasses.replace(
+        cfg, mac=MacConfig(mode="encoded_infer", bits=bits,
+                           per_layer_s=False, macs=macs, backend=backend))
+    n_folded = sum(1 for k in _flat_keys(delta) if k.endswith("_fw"))
+    info = {"bundle_dir": bundle, "loaded": loaded, "n_folded": n_folded,
+            "families": {n: float(m.spec.rmse) for n, m in macs.items()}}
+    if verbose:
+        src = "loaded" if loaded else "built"
+        print(f"[encoded-serving] {src} bundle {bundle} "
+              f"({n_folded} folded linears, families="
+              f"{sorted(info['families'])})")
+    return params_enc, cfg_enc, info
+
+
+def _flat_keys(tree, prefix=""):
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            yield from _flat_keys(v, prefix + k + "/")
+        else:
+            yield prefix + k

@@ -11,8 +11,11 @@ Two serving modes:
     KV, repro.serve.paged_cache), prefill and decode interleave, and
     finished slots are swapped for queued requests every step.  Decode is
     ONE jitted step for all slots regardless of per-request progress, so
-    the encoded-MAC matmul path (cfg.mac.mode='encoded') stays hot under
-    ragged traffic.
+    the encoded-MAC matmul path stays hot under ragged traffic.  For
+    calibrated encoded inference (mac mode 'encoded_infer' — per-family
+    encodings, pre-folded bitplane weights) build the params/cfg pair
+    with repro.serve.encoded.prepare_encoded_serving first; the engine
+    itself is MAC-mode agnostic.
 
 serve_step (decode) is THE lowered function for decode_* dry-run shapes:
 one new token against a KV cache of seq_len.  Caches are donated
@@ -296,6 +299,7 @@ class Engine:
             "page_size": self.kv.page_size,
             "n_pages": self.kv.n_pages,
             "n_slots": self.kv.n_slots,
+            "mac_mode": self.cfg.mac.mode,
         })
         return m
 

@@ -60,6 +60,24 @@ def test_xla_backend_matches_ref():
                                rtol=2e-2, atol=2e-2)
 
 
+def test_variable_arity_monomials():
+    """1-/2-input monomials need no dummy-shift padding: the padded (U, 3)
+    array form and the variable-arity tuple form agree on both backends."""
+    prog, spec, w, Wt, bias = _folded(k=32, n=16)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.integers(-8, 8, (16, 32)), jnp.int8)
+    monos = prog.a_mono_tuples
+    assert any(len(m) < 3 for m in monos)        # real 1-/2-input gates
+    assert all(len(m) == len(set(m)) for m in monos)
+    for backend in ("xla", "pallas_interpret"):
+        got_pad = encoded_matmul(x, Wt, bias, prog.a_mono_bits,
+                                 backend=backend, bm=16, bn=16, bk=32)
+        got_var = encoded_matmul(x, Wt, bias, monos,
+                                 backend=backend, bm=16, bn=16, bk=32)
+        np.testing.assert_array_equal(np.asarray(got_pad),
+                                      np.asarray(got_var))
+
+
 def test_planes_ref_bits():
     mono = np.array([[0, 0, 0], [1, 1, 1], [0, 1, 1]], np.int32)
     x = jnp.asarray([[0, 1, 2, 3, -1]], jnp.int8)

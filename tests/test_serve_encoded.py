@@ -1,0 +1,180 @@
+"""Calibrated encoded-MAC serving: calibration driver, folded-weight cache,
+fitted-RMSE agreement bounds, and decode determinism across a cache reload
+(repro.serve.encoded — DESIGN.md §3)."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core.circuits import Circuit, sample_circuits, \
+    exact_product_circuit
+from repro.core.encoding import EncodingSpec, fit_circuit, rmse_of, \
+    fit_position_weights
+from repro.core.mac import EncodedMac
+from repro.core import gates as G
+from repro.core.layers import MacConfig
+from repro.kernels.ops import encoded_matmul
+from repro.models import init_model, apply_model
+from repro.quant.uniform import quantize_codes, calibrate_scale
+from repro.serve import prepare_encoded_serving
+
+
+def _cfg(bits=4):
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    return dataclasses.replace(cfg, mac=MacConfig(bits=bits))
+
+
+_FAST = dict(m_bits=10, n_samples=8, refine=4, calib_batches=2,
+             calib_batch_size=2, calib_seq=16, verbose=False)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = _cfg(bits=4)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+# ---------------------------------------------------------------------------
+# artifact cache
+# ---------------------------------------------------------------------------
+
+def test_artifact_roundtrip(model, tmp_path):
+    params, cfg = model
+    p1, c1, info1 = prepare_encoded_serving(params, cfg, cache_dir=str(tmp_path),
+                                            **_FAST)
+    assert not info1["loaded"] and info1["n_folded"] >= 6
+    bundle = info1["bundle_dir"]
+    with open(os.path.join(bundle, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert set(manifest["families"]) == set(info1["families"])
+
+    # per-family encodings round-trip through the bundle JSONs
+    for name in manifest["families"]:
+        mac = EncodedMac.load(f"enc_{name}", artifact_dir=bundle)
+        live = c1.mac.mac_for(name)
+        assert mac.spec.circuit.to_json() == live.spec.circuit.to_json()
+        np.testing.assert_allclose(mac.spec.s, live.spec.s, rtol=1e-6)
+        assert mac.spec.rmse == pytest.approx(live.spec.rmse, rel=1e-6)
+
+    # second prepare loads the cache and reproduces identical folded params
+    p2, c2, info2 = prepare_encoded_serving(params, cfg, cache_dir=str(tmp_path),
+                                            **_FAST)
+    assert info2["loaded"]
+    l1, t1 = jax.tree_util.tree_flatten(p1)
+    l2, t2 = jax.tree_util.tree_flatten(p2)
+    assert t1 == t2
+    for a, b in zip(l1, l2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bundle_key_tracks_params(model, tmp_path):
+    params, cfg = model
+    _, _, info1 = prepare_encoded_serving(params, cfg, cache_dir=str(tmp_path),
+                                          **_FAST)
+    params2 = init_model(jax.random.PRNGKey(1), cfg)
+    _, _, info2 = prepare_encoded_serving(params2, cfg, cache_dir=str(tmp_path),
+                                          **_FAST)
+    assert info1["bundle_dir"] != info2["bundle_dir"]   # fingerprinted
+    assert not info2["loaded"]
+
+
+# ---------------------------------------------------------------------------
+# fitted-RMSE agreement bound
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_encoded_linear_within_fitted_rmse_bound(seed):
+    """Per-element error of the folded encoded matmul vs the exact int8
+    matmul is a sum of k independent LUT errors with std = fitted RMSE, so
+    its RMS is ≤ ~rmse·√k (3× guard band; sa·sw rescales both sides)."""
+    bits, m_bits, m, k, n = 4, 12, 32, 64, 32
+    rng = np.random.default_rng(seed)
+    gt, ii = sample_circuits(rng, 1, m_bits, bits, bits)
+    spec = fit_circuit(Circuit(gt[0], ii[0], bits, bits))
+    mac = EncodedMac.from_spec(spec)
+
+    xc = jnp.asarray(rng.integers(-7, 8, (m, k)), jnp.int8)
+    wc = jnp.asarray(rng.integers(-7, 8, (k, n)), jnp.int8)
+    Wt, bias = mac.program.fold_weights(wc, jnp.asarray(spec.s))
+    got = encoded_matmul(xc, Wt, bias, mac.program.a_mono_tuples,
+                         backend="xla")
+    ref = xc.astype(jnp.float32) @ wc.astype(jnp.float32)
+    err = np.asarray(got) - np.asarray(ref)
+    bound = 3.0 * spec.rmse * np.sqrt(k)
+    assert float(np.sqrt(np.mean(err ** 2))) <= bound
+
+
+def test_exact_encoding_logits_match_dense(model, tmp_path):
+    """With the zero-RMSE AND-plane circuit the whole encoded serving path
+    reduces to int8 quantization + bf16 folds — logits must track the fp
+    forward closely (the fitted-RMSE bound at rmse=0)."""
+    params, cfg4 = model
+    cfg = dataclasses.replace(cfg4, mac=MacConfig(bits=8))
+    circ, s = exact_product_circuit(8, 8)
+    exact = EncodedMac.from_spec(EncodingSpec(circ, s, 0.0))
+    ov = {nm: exact for nm in ("wq", "wk", "wv", "wo", "wi", "wg")}
+    pe, ce, _ = prepare_encoded_serving(
+        params, cfg, macs_override=ov, cache_dir=str(tmp_path),
+        calib_batches=2, calib_batch_size=2, calib_seq=16, verbose=False)
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 16)))
+    ld, _, _ = apply_model(params, cfg, toks)
+    le, _, _ = apply_model(pe, ce, toks)
+    ld, le = np.asarray(ld), np.asarray(le)
+    rel = np.sqrt(np.mean((ld - le) ** 2)) / np.sqrt(np.mean(ld ** 2))
+    assert rel < 0.2                      # int8 quantization noise only
+    top1 = np.mean(ld.argmax(-1) == le.argmax(-1))
+    assert top1 >= 0.8
+
+
+# ---------------------------------------------------------------------------
+# decode determinism across a cache reload
+# ---------------------------------------------------------------------------
+
+def test_decode_token_identical_across_cache_reload(model, tmp_path):
+    from repro.serve import Engine
+    params, cfg = model
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 6),
+               rng.integers(0, cfg.vocab_size, 9)]
+
+    outs = []
+    for _ in range(2):                    # 2nd build loads the artifact
+        pe, ce, info = prepare_encoded_serving(
+            params, cfg, cache_dir=str(tmp_path), **_FAST)
+        eng = Engine(pe, ce, n_slots=2, page_size=8, n_pages=32)
+        rids = [eng.submit(p, max_new=4) for p in prompts]
+        res = eng.run()
+        outs.append([res[r].tolist() for r in rids])
+    assert info["loaded"]
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# task-specific (weighted) fit
+# ---------------------------------------------------------------------------
+
+def test_weighted_fit_beats_uniform_on_weighted_metric():
+    bits, m_bits = 4, 10
+    rng = np.random.default_rng(0)
+    gt, ii = sample_circuits(rng, 8, m_bits, bits, bits)
+    vals = G.signed_products(bits, bits)
+    T = vals.size
+    # weight mass concentrated on small-magnitude operands (typical of
+    # calibrated activations)
+    w = np.exp(-np.abs(vals) / 8.0).astype(np.float32)
+    w *= T / w.sum()
+    s_u, _ = fit_position_weights(gt, ii, vals, bits, bits)
+    s_w, r_w = fit_position_weights(gt, ii, vals, bits, bits, row_weights=w)
+    for c in range(gt.shape[0]):
+        circ = Circuit(gt[c], ii[c], bits, bits)
+        wu = rmse_of(circ, s_u[c], row_weights=w)
+        ww = rmse_of(circ, s_w[c], row_weights=w)
+        assert ww <= wu * (1 + 1e-4)
+        assert r_w[c] == pytest.approx(ww, rel=1e-3, abs=1e-3)
