@@ -28,7 +28,7 @@ def run():
     f_lut = jax.jit(lambda a: lut_matmul(a, wq, mac.spec.lut()))
     f_fp = jax.jit(lambda a: a.astype(jnp.float32)
                    @ wq.astype(jnp.float32))
-    return {
+    res = {
         "planes_R": int(prog.n_a_planes),
         "b_planes_V": int(prog.n_b_planes),
         "m_bits": int(mac.spec.m_bits),
@@ -37,6 +37,24 @@ def run():
         "lut_oracle_us": time_call(f_lut, x, n=3),
         "fp_matmul_us": time_call(f_fp, x, n=10),
     }
+    # decode shapes: small m (a B=4 decode step) used to pad up to bm=128,
+    # wasting 97% of the MXU rows — bm=None picks the bucket (8/32/128)
+    # covering m.  Record adaptive vs fixed-128 Pallas wall time + the
+    # padded-row waste each avoids.
+    for mb in (4, 32):
+        xs = jnp.asarray(rng.integers(-127, 128, (mb, k)), jnp.int8)
+        f_ad = jax.jit(lambda a: encoded_matmul(
+            a, Wt, bias, prog.a_mono_bits, backend="pallas_interpret"))
+        f_128 = jax.jit(lambda a: encoded_matmul(
+            a, Wt, bias, prog.a_mono_bits, backend="pallas_interpret",
+            bm=128))
+        from repro.kernels.ops import _pick_bm
+        res[f"decode_m{mb}_bm_bucket"] = _pick_bm(mb)
+        res[f"decode_m{mb}_adaptive_us"] = time_call(f_ad, xs, n=3)
+        res[f"decode_m{mb}_bm128_us"] = time_call(f_128, xs, n=3)
+        res[f"decode_m{mb}_row_util_adaptive"] = mb / _pick_bm(mb)
+        res[f"decode_m{mb}_row_util_bm128"] = mb / 128
+    return res
 
 
 def csv_lines(res):
@@ -44,4 +62,7 @@ def csv_lines(res):
         f"kernel_encoded_xla,{res['encoded_xla_us']:.1f},R={res['planes_R']}",
         f"kernel_lut_oracle,{res['lut_oracle_us']:.1f},",
         f"kernel_fp_matmul,{res['fp_matmul_us']:.1f},",
+        f"kernel_decode_m4_adaptive,{res['decode_m4_adaptive_us']:.1f},"
+        f"bm={res['decode_m4_bm_bucket']}",
+        f"kernel_decode_m4_bm128,{res['decode_m4_bm128_us']:.1f},bm=128",
     ]

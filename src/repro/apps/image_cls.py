@@ -104,14 +104,17 @@ def _cal_conv(pc, x, mcfg, kh, kw):
 
 
 def convert_params(params_fp, mcfg_to: MacConfig):
-    """fp params → params for an int8/encoded MacConfig (adds s + scales)."""
+    """fp params → params for the target MacConfig: the executor's suffix
+    schema (aux_init) declares which leaves the mode needs — no mode-string
+    special-casing here (DESIGN.md §6)."""
     out = {}
     for name, p in params_fp.items():
         q = {"w": p["w"]}
-        if mcfg_to.mode == "encoded" and mcfg_to.per_layer_s:
-            q["s"] = jnp.asarray(mcfg_to.mac.s_init, jnp.float32)
-        if mcfg_to.mode in ("int8", "encoded"):
-            q["a_scale"] = p.get("a_scale", jnp.ones((), jnp.float32))
+        aux = mcfg_to.executor.aux_init("w", mcfg_to)
+        if "w_s" in aux:
+            q["s"] = aux["w_s"]
+        if "w_as" in aux:
+            q["a_scale"] = p.get("a_scale", aux["w_as"])
         out[name] = q
     return out
 

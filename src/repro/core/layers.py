@@ -18,15 +18,19 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.quant.uniform import fake_quant, calibrate_scale, quantize_codes
-from .mac import EncodedMac, encoded_matmul_qat
+from repro.quant.uniform import calibrate_scale
+from .mac import EncodedMac
+from .macexec import get_executor
 
 
 @dataclasses.dataclass(frozen=True)
 class MacConfig:
     """MAC-mode configuration shared by every linear layer.
 
-    ``mode``:
+    ``mode`` names a registered :class:`repro.core.macexec.MacExecutor`
+    (DESIGN.md §6) — the executor owns the mode's param-suffix schema, init,
+    and apply; built-ins:
+
       'fp'            — plain fp matmul.
       'int8'          — int8 fake-quant QAT simulation.
       'encoded'       — encoded-MAC forward with STE backward (training; folds
@@ -38,7 +42,7 @@ class MacConfig:
                         (DESIGN.md §3).  Params for this mode are *built* from
                         fp params, never initialized directly.
     """
-    mode: str = "fp"                 # fp | int8 | encoded | encoded_infer
+    mode: str = "fp"                 # any mode in macexec.available_modes()
     bits: int = 8
     per_layer_s: bool = True         # trainable position weights per layer
     mac: Optional[EncodedMac] = None
@@ -51,6 +55,12 @@ class MacConfig:
     def with_mode(self, mode: str) -> "MacConfig":
         return dataclasses.replace(self, mode=mode)
 
+    @property
+    def executor(self):
+        """The registered MacExecutor for ``mode`` (the dispatch point every
+        linear goes through — no mode-string chains at call sites)."""
+        return get_executor(self.mode)
+
     def mac_for(self, name: str) -> EncodedMac:
         """Projection-family encoding for linear ``name`` (falls back to the
         shared ``mac``)."""
@@ -60,36 +70,27 @@ class MacConfig:
         return m
 
 
+# EncodedDense keeps its historical param names ('s', 'a_scale') while the
+# executors use the suffix schema ('w_s', 'w_as'); these two maps translate.
+_DENSE_ALIASES = (("s", "w_s"), ("a_scale", "w_as"))
+
+
 def dense_init(key, d_in: int, d_out: int, cfg: MacConfig,
                w_scale: Optional[float] = None) -> dict:
-    std = w_scale if w_scale is not None else (1.0 / np.sqrt(d_in))
-    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * std}
-    if cfg.mode == "encoded" and cfg.per_layer_s:
-        p["s"] = jnp.asarray(cfg.mac.s_init, jnp.float32)
-    if cfg.mode in ("int8", "encoded"):
-        p["a_scale"] = jnp.ones((), jnp.float32)   # calibration buffer
+    p = cfg.executor.init(key, d_in, d_out, "w", cfg, scale=w_scale)
+    for legacy, suffixed in _DENSE_ALIASES:
+        if suffixed in p:
+            p[legacy] = p.pop(suffixed)
     return p
 
 
 def dense_apply(p: dict, x: jnp.ndarray, cfg: MacConfig) -> jnp.ndarray:
-    """x (..., d_in) → (..., d_out) under the configured MAC mode."""
-    w = p["w"]
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    if cfg.mode == "fp":
-        out = x2 @ w
-    elif cfg.mode == "int8":
-        sw = jax.lax.stop_gradient(calibrate_scale(w, cfg.bits))
-        sa = jax.lax.stop_gradient(p["a_scale"])
-        out = fake_quant(x2, sa, cfg.bits) @ fake_quant(w, sw, cfg.bits)
-    elif cfg.mode == "encoded":
-        sw = jax.lax.stop_gradient(calibrate_scale(w, cfg.bits))
-        sa = jax.lax.stop_gradient(p["a_scale"])
-        s = p["s"] if cfg.per_layer_s else jnp.asarray(cfg.mac.s_init)
-        out = encoded_matmul_qat(x2, w, sa, sw, s, cfg.mac.program, cfg.bits)
-    else:
-        raise ValueError(cfg.mode)
-    return out.reshape(*lead, -1)
+    """x (..., d_in) → (..., d_out) under the configured MAC executor."""
+    q = dict(p)
+    for legacy, suffixed in _DENSE_ALIASES:
+        if legacy in q:
+            q[suffixed] = q.pop(legacy)
+    return cfg.executor.apply(q, "w", x, cfg, jnp.float32)
 
 
 def calibrate_dense(p: dict, x: jnp.ndarray, cfg: MacConfig,

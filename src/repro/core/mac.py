@@ -116,21 +116,3 @@ def encoded_matmul_qat(x: jnp.ndarray, w: jnp.ndarray,
     exact = x @ w
     # value == approx; d/ds via approx; d/dx, d/dw via the exact term (STE)
     return approx + (exact - jax.lax.stop_gradient(exact))
-
-
-def encoded_matmul_infer(x: jnp.ndarray, folded, scale_x: jnp.ndarray,
-                         scale_w: jnp.ndarray, program: BitplaneProgram,
-                         bits: int = 8, use_pallas: bool = False
-                         ) -> jnp.ndarray:
-    """Inference path with pre-folded weights (W̃, bias)."""
-    from repro.quant.uniform import quantize_codes
-    Wt, bias = folded
-    xc = quantize_codes(x, scale_x, bits)
-    if use_pallas:
-        from repro.kernels.ops import encoded_matmul as pallas_op
-        out = pallas_op(xc, Wt, bias, program.a_mono_tuples)
-    else:
-        A = program.planes(xc, "a").astype(jnp.bfloat16)
-        out = jnp.einsum("umk,ukn->mn", A, Wt.astype(jnp.bfloat16),
-                         preferred_element_type=jnp.float32) + bias
-    return out * (scale_x * scale_w)

@@ -1,0 +1,182 @@
+"""MAC backend registry — the single dispatch point for linear-layer MAC
+execution (DESIGN.md §6).
+
+Every MAC mode ('fp', 'int8', 'encoded' QAT, 'encoded_infer' serving) is a
+registered :class:`MacExecutor` that owns
+
+  * its **param-suffix schema** — the auxiliary leaves it stores next to the
+    weight (``_s`` position weights, ``_as``/``_ws`` activation/weight
+    scales, ``_fw``/``_fb`` pre-folded bitplane tensors),
+  * **init** — how those leaves are created (or, for serving modes, why they
+    cannot be), and
+  * **apply** — the matmul itself.
+
+``nn.common.linear`` / ``core.layers.dense_apply`` reduce to a registry
+lookup: no call site switches on mode strings.  New backends (e.g. an fp8 or
+a sparsity-aware MAC) plug in with ``@register`` and are immediately usable
+by every model, the serving engine, and the sharding rules.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.quant.uniform import fake_quant, calibrate_scale, quantize_codes
+
+_REGISTRY: dict = {}
+
+
+def register(cls):
+    """Class decorator: register a MacExecutor under ``cls.mode``."""
+    _REGISTRY[cls.mode] = cls()
+    return cls
+
+
+def get_executor(mode: str) -> "MacExecutor":
+    try:
+        return _REGISTRY[mode]
+    except KeyError:
+        raise ValueError(f"unknown MAC mode {mode!r}; registered modes: "
+                         f"{sorted(_REGISTRY)}") from None
+
+
+def available_modes() -> list:
+    return sorted(_REGISTRY)
+
+
+def mm(x: jnp.ndarray, w: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    """Matmul in compute dtype.
+
+    bf16 compute emits bf16 dot outputs so TP psums travel in bf16 (the MXU
+    still accumulates f32 internally on TPU); f32 compute keeps f32.  §Perf
+    iteration 1 measured 2× collective-byte reduction from this."""
+    pref = compute_dtype if jnp.dtype(compute_dtype) == jnp.bfloat16 \
+        else jnp.float32
+    out = jnp.einsum("...k,kn->...n", x.astype(compute_dtype),
+                     w.astype(compute_dtype),
+                     preferred_element_type=pref)
+    return out.astype(compute_dtype)
+
+
+class MacExecutor:
+    """Base executor: fp weight init, no auxiliary leaves.
+
+    ``param_suffixes`` documents (and schema-checks) the auxiliary leaves an
+    executor reads/writes next to the ``name`` weight; the shared ``_b`` bias
+    is owned by the call site, not the executor.
+    """
+    mode: str = "?"
+    param_suffixes: tuple = ()
+    # params for this mode are *built* offline (e.g. folded serving tensors),
+    # never initialized from a PRNG key
+    requires_prepared_params: bool = False
+
+    def init(self, key, d_in: int, d_out: int, name: str, mcfg,
+             dtype=jnp.float32, scale=None) -> dict:
+        std = scale if scale is not None else 1.0 / np.sqrt(d_in)
+        p = {name: (jax.random.normal(key, (d_in, d_out), jnp.float32)
+                    * std).astype(dtype)}
+        p.update(self.aux_init(name, mcfg))
+        return p
+
+    def aux_init(self, name: str, mcfg) -> dict:
+        """The executor's auxiliary leaves (suffix schema) for one linear."""
+        return {}
+
+    def apply(self, p: dict, name: str, x: jnp.ndarray, mcfg,
+              compute_dtype) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+@register
+class FpExecutor(MacExecutor):
+    """Plain fp matmul (baseline training / serving)."""
+    mode = "fp"
+
+    def apply(self, p, name, x, mcfg, compute_dtype):
+        return mm(x, p[name], compute_dtype)
+
+
+@register
+class Int8Executor(MacExecutor):
+    """int8 fake-quant QAT simulation (paper's "Orig." columns)."""
+    mode = "int8"
+    param_suffixes = ("_as",)
+
+    def aux_init(self, name, mcfg):
+        return {name + "_as": jnp.ones((), jnp.float32)}
+
+    def apply(self, p, name, x, mcfg, compute_dtype):
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        wf = p[name].astype(jnp.float32)
+        sa = jax.lax.stop_gradient(p[name + "_as"])
+        sw = jax.lax.stop_gradient(calibrate_scale(wf, mcfg.bits))
+        out = fake_quant(x2, sa, mcfg.bits) @ fake_quant(wf, sw, mcfg.bits)
+        return out.reshape(*lead, -1).astype(compute_dtype)
+
+
+@register
+class EncodedQatExecutor(MacExecutor):
+    """Encoded-MAC forward with STE backward + trainable position weights
+    (paper's "Prop." columns; folds weights on every call)."""
+    mode = "encoded"
+    param_suffixes = ("_s", "_as")
+
+    def aux_init(self, name, mcfg):
+        p = {name + "_as": jnp.ones((), jnp.float32)}
+        if mcfg.per_layer_s:
+            p[name + "_s"] = jnp.asarray(mcfg.mac.s_init, jnp.float32)
+        return p
+
+    def apply(self, p, name, x, mcfg, compute_dtype):
+        from repro.core.mac import encoded_matmul_qat
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        wf = p[name].astype(jnp.float32)
+        sa = jax.lax.stop_gradient(p[name + "_as"])
+        sw = jax.lax.stop_gradient(calibrate_scale(wf, mcfg.bits))
+        s = p.get(name + "_s", None)
+        if s is None:
+            s = jnp.asarray(mcfg.mac.s_init)
+        out = encoded_matmul_qat(x2, wf, sa, sw, s, mcfg.mac.program,
+                                 mcfg.bits)
+        return out.reshape(*lead, -1).astype(compute_dtype)
+
+
+@register
+class EncodedInferExecutor(MacExecutor):
+    """Serving path: weights pre-folded once into (U, k, n) bitplane tensors
+    + bias by ``repro.serve.encoded.prepare_encoded_serving``; applies via
+    ``kernels/ops.encoded_matmul`` with the linear's tensor-parallel role
+    (column/row over the model axis — DESIGN.md §6) so the kernel blocks
+    against the local shard and psums row-parallel partial accumulations.
+
+    Linears without folded tensors (un-calibrated families, e.g. vmapped MoE
+    expert linears) fall back to the fp matmul — the gate is per-layer, not
+    global.
+    """
+    mode = "encoded_infer"
+    param_suffixes = ("_fw", "_fb", "_as", "_ws")
+    requires_prepared_params = True
+
+    def init(self, key, d_in, d_out, name, mcfg, dtype=jnp.float32,
+             scale=None):
+        raise ValueError(
+            "'encoded_infer' params are built from fp params by "
+            "repro.serve.encoded.prepare_encoded_serving, not initialized")
+
+    def apply(self, p, name, x, mcfg, compute_dtype):
+        if name + "_fw" not in p:
+            return mm(x, p[name], compute_dtype)
+        from repro.kernels.ops import encoded_matmul
+        from repro.parallel.sharding import linear_role
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        sa, sw = p[name + "_as"], p[name + "_ws"]
+        xc = quantize_codes(x2, sa, mcfg.bits)
+        out = encoded_matmul(xc, p[name + "_fw"], p[name + "_fb"],
+                             mcfg.mac_for(name).program.a_mono_tuples,
+                             backend=mcfg.backend, role=linear_role(name))
+        return (out * (sa * sw)).reshape(*lead, -1).astype(compute_dtype)

@@ -15,6 +15,12 @@ with the paper's encoded-MAC inference mode.
   PYTHONPATH=src python -m repro.launch.serve --reduced --continuous \
       --mac encoded
 
+  # tensor-parallel encoded serving over the model axis (DESIGN.md §6;
+  # folded bitplane tensors shard col/row-parallel, per-device bytes ÷ TP):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --reduced --continuous \
+      --mac encoded --mesh 8
+
 ``--mac encoded`` routes every calibrated projection through
 kernels/ops.encoded_matmul with per-projection-family encodings and
 pre-folded (U, k, n) bitplane weights (DESIGN.md §3, docs/encoding.md).
@@ -41,6 +47,11 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching over the paged KV cache")
+    ap.add_argument("--mesh", default=None,
+                    help="tensor-parallel serving (DESIGN.md §6): 'M' "
+                         "shards the model axis over M devices, 'DxM' adds "
+                         "a data axis (e.g. --mesh 8 or --mesh 2x4); "
+                         "encoded folded tensors shard col/row-parallel")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=256)
@@ -70,6 +81,21 @@ def main():
     from repro.core.layers import MacConfig
     from repro.models import init_model
     from repro.serve import Engine, ServeEngine, prepare_encoded_serving
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_test_mesh
+        import re
+        m = re.fullmatch(r"(?:(\d+)x)?(\d+)", args.mesh)
+        if m is None:
+            ap.error(f"--mesh {args.mesh!r}: expected 'M' or 'DxM' "
+                     "(e.g. --mesh 8 or --mesh 2x4)")
+        n_data, n_model = int(m.group(1) or 1), int(m.group(2))
+        if n_data * n_model > jax.device_count():
+            ap.error(f"--mesh {args.mesh} needs {n_data * n_model} devices, "
+                     f"have {jax.device_count()} (hint: "
+                     "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        mesh = make_test_mesh(n_data, n_model)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -111,7 +137,7 @@ def main():
     if args.continuous:
         engine = Engine(params, cfg, n_slots=args.slots,
                         page_size=args.page_size, n_pages=args.n_pages,
-                        reserve=args.reserve)
+                        reserve=args.reserve, mesh=mesh)
         t0 = time.time()
         rids = [engine.submit(r, max_new=args.max_new) for r in reqs]
         outs = engine.run()
@@ -128,7 +154,8 @@ def main():
             print(f"req{i}: {list(map(int, outs[rid][:10]))} ...")
         return
 
-    engine = ServeEngine(params, cfg, batch_slots=args.slots, max_len=128)
+    engine = ServeEngine(params, cfg, batch_slots=args.slots, max_len=128,
+                         mesh=mesh)
     t0 = time.time()
     outs = engine.run(reqs, max_new=args.max_new)
     dt = time.time() - t0

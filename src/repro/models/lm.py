@@ -51,13 +51,14 @@ def _stages(cfg):
 
 
 def init_model(key, cfg):
-    if cfg.mac.mode == "encoded_infer":
-        # serving-only mode: params carry pre-folded (U, k, n) bitplane
+    if cfg.mac.executor.requires_prepared_params:
+        # serving-only executors (e.g. 'encoded_infer') carry pre-folded
         # tensors derived from calibrated fp params — build them with
         # repro.serve.encoded.prepare_encoded_serving (DESIGN.md §3)
         raise ValueError(
-            "init_model cannot initialize mac mode 'encoded_infer'; init in "
-            "'fp' mode and transform via serve.encoded.prepare_encoded_serving")
+            f"init_model cannot initialize mac mode {cfg.mac.mode!r}; init "
+            "in 'fp' mode and transform via "
+            "serve.encoded.prepare_encoded_serving")
     if cfg.family == "encdec":
         from .encdec import init_encdec
         return init_encdec(key, cfg)

@@ -5,13 +5,11 @@ from __future__ import annotations
 
 from typing import Optional
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core.layers import MacConfig
-from repro.core.mac import encoded_matmul_qat
-from repro.quant.uniform import fake_quant, calibrate_scale, quantize_codes
+from repro.core.macexec import mm
 
 
 # Serving-calibration hook (DESIGN.md §3): when set, ``linear`` reports every
@@ -28,81 +26,27 @@ def set_activation_recorder(fn):
     return prev
 
 
-def mm(x: jnp.ndarray, w: jnp.ndarray, compute_dtype) -> jnp.ndarray:
-    """Matmul in compute dtype.
-
-    bf16 compute emits bf16 dot outputs so TP psums travel in bf16 (the MXU
-    still accumulates f32 internally on TPU); f32 compute keeps f32.  §Perf
-    iteration 1 measured 2× collective-byte reduction from this."""
-    pref = compute_dtype if jnp.dtype(compute_dtype) == jnp.bfloat16 \
-        else jnp.float32
-    out = jnp.einsum("...k,kn->...n", x.astype(compute_dtype),
-                     w.astype(compute_dtype),
-                     preferred_element_type=pref)
-    return out.astype(compute_dtype)
-
-
 def linear_init(key, d_in: int, d_out: int, name: str, mcfg: MacConfig,
                 bias: bool = False, dtype=jnp.float32, scale: float = None
                 ) -> dict:
-    if mcfg.mode == "encoded_infer":
-        raise ValueError(
-            "'encoded_infer' params are built from fp params by "
-            "repro.serve.encoded.prepare_encoded_serving, not initialized")
-    std = scale if scale is not None else 1.0 / np.sqrt(d_in)
-    p = {name: (jax.random.normal(key, (d_in, d_out), jnp.float32)
-                * std).astype(dtype)}
+    """Init a named linear: the MAC executor owns the weight + its suffix
+    schema (DESIGN.md §6); the shared ``_b`` bias is mode-independent."""
+    p = mcfg.executor.init(key, d_in, d_out, name, mcfg, dtype=dtype,
+                           scale=scale)
     if bias:
         p[name + "_b"] = jnp.zeros((d_out,), dtype)
-    if mcfg.mode == "encoded" and mcfg.per_layer_s:
-        p[name + "_s"] = jnp.asarray(mcfg.mac.s_init, jnp.float32)
-    if mcfg.mode in ("int8", "encoded"):
-        p[name + "_as"] = jnp.ones((), jnp.float32)
     return p
 
 
 def linear(p: dict, name: str, x: jnp.ndarray, mcfg: MacConfig,
            compute_dtype=jnp.float32) -> jnp.ndarray:
-    """Apply a named linear under the configured MAC mode.
-
-    'encoded_infer' (serving) routes through kernels/ops.encoded_matmul with
-    the weights pre-folded into ``name_fw``/``name_fb`` bitplane tensors;
-    linears without folded tensors (un-calibrated families, e.g. vmapped MoE
-    experts) fall back to the fp matmul — the gate is per-layer, not global.
-    """
-    w = p[name]
+    """Apply a named linear: recorder hook + MAC-executor dispatch
+    (DESIGN.md §6) + bias.  All mode-specific behaviour (quantization,
+    encoded kernels, folded-tensor serving, TP roles) lives in the
+    registered executor, not here."""
     if _ACT_RECORDER is not None:
-        _ACT_RECORDER(name, w, x)
-    if mcfg.mode == "encoded_infer":
-        if name + "_fw" not in p:
-            out = mm(x, w, compute_dtype)
-        else:
-            from repro.kernels.ops import encoded_matmul
-            lead = x.shape[:-1]
-            x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-            sa, sw = p[name + "_as"], p[name + "_ws"]
-            xc = quantize_codes(x2, sa, mcfg.bits)
-            out = encoded_matmul(xc, p[name + "_fw"], p[name + "_fb"],
-                                 mcfg.mac_for(name).program.a_mono_tuples,
-                                 backend=mcfg.backend)
-            out = (out * (sa * sw)).reshape(*lead, -1).astype(compute_dtype)
-    elif mcfg.mode == "fp":
-        out = mm(x, w, compute_dtype)
-    else:
-        lead = x.shape[:-1]
-        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-        wf = w.astype(jnp.float32)
-        sa = jax.lax.stop_gradient(p[name + "_as"])
-        sw = jax.lax.stop_gradient(calibrate_scale(wf, mcfg.bits))
-        if mcfg.mode == "int8":
-            out = fake_quant(x2, sa, mcfg.bits) @ fake_quant(wf, sw, mcfg.bits)
-        else:
-            s = p.get(name + "_s", None)
-            if s is None:
-                s = jnp.asarray(mcfg.mac.s_init)
-            out = encoded_matmul_qat(x2, wf, sa, sw, s, mcfg.mac.program,
-                                     mcfg.bits)
-        out = out.reshape(*lead, -1).astype(compute_dtype)
+        _ACT_RECORDER(name, p[name], x)
+    out = mcfg.executor.apply(p, name, x, mcfg, compute_dtype)
     if name + "_b" in p:
         out = out + p[name + "_b"].astype(out.dtype)
     return out

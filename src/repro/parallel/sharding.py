@@ -35,6 +35,17 @@ else:                                   # jax <= 0.4.x
 # pre-0.5 shard_map treats everything as varying, so identity is correct.
 pvary = getattr(jax.lax, "pvary", lambda x, axes: x)
 
+
+def shard_map_norep(f, mesh, in_specs, out_specs):
+    """shard_map with replication checking off (Pallas calls have no rep
+    rule); newer releases renamed/dropped ``check_rep``, so fall back."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)
+
 _ctx = threading.local()
 
 
@@ -104,6 +115,43 @@ def batch_spec(mesh: Mesh, shape, batch_axis: int = 0) -> NamedSharding:
 
 
 # ---------------------------------------------------------------------------
+# Per-linear tensor-parallel roles over the model axis (DESIGN.md §6).
+#
+#   'column'     — the OUTPUT dim is model-sharded (wq/wk/wv/wi/wg/lm_head):
+#                  no collective; activations leave feature-sharded.
+#   'row'        — the INPUT dim is model-sharded (wo/wout): every shard
+#                  computes a partial accumulation that is psum-reduced.
+#   'replicated' — everything else (low-rank downs, routers, small projs).
+#
+# The same table drives (a) the sharding rules for the folded encoded-serving
+# bitplane tensors below and (b) the shard-local kernel dispatch in
+# kernels/ops.encoded_matmul.
+#
+# Keyed by bare param name while the placement rules are path-keyed: sound
+# because the only servable-folded linear named 'w' is the untied lm_head
+# (column, matching its path rule) — other 'w' linears (mtp proj, routers)
+# are never walked by the calibration capture, so their role is never
+# consulted.  A kernel receiving a role that disagrees with placement stays
+# correct regardless (shard_map reshards); only locality is lost.
+# ---------------------------------------------------------------------------
+
+LINEAR_ROLES: dict = {
+    "wq": "column", "wk": "column", "wv": "column", "wkv": "column",
+    "wqkv": "column", "wq_b": "column", "wk_b": "column", "wv_b": "column",
+    "wi": "column", "wg": "column", "win": "column", "wup": "column",
+    "w": "column",                        # lm_head / untied output head
+    "wo": "row", "wout": "row",
+}
+
+
+def linear_role(name: str) -> str:
+    """Tensor-parallel role of linear param ``name`` ('column' | 'row' |
+    'replicated').  Advisory for placement: the kernel falls back to the
+    unsharded path when the shapes don't divide the model axis."""
+    return LINEAR_ROLES.get(name, "replicated")
+
+
+# ---------------------------------------------------------------------------
 # Parameter sharding rules (path regex → PartitionSpec items).
 # Paths look like "layers/attn/wq", "layers/moe/experts_w1", "embed/table"…
 # Rules are checked in order; first match wins.  ``F`` marks the dim that the
@@ -111,6 +159,19 @@ def batch_spec(mesh: Mesh, shape, batch_axis: int = 0) -> NamedSharding:
 # ---------------------------------------------------------------------------
 
 _RULES: list[tuple[str, tuple]] = [
+    # folded encoded-serving bitplane tensors ``*_fw (U, k, n)`` / ``*_fb
+    # (n,)`` (DESIGN.md §6): the U plane dim is always replicated; column-
+    # parallel projections shard n (mirroring the fp out-dim rule), row-
+    # parallel ones shard k and keep the bias replicated — it is added once
+    # after the psum of partial encoded accumulations.
+    (r"w(q|k|v|kv|qkv|i|g|in|up)_fw$", (None, "fsdp", "model")),
+    (r"w(q|k|v|kv|qkv|i|g|in|up)_fb$", ("model",)),
+    (r"w(o|out)_fw$",        (None, "model", "fsdp")),
+    (r"w(o|out)_fb$",        None),
+    (r"(lm_head|head)/w_fw$", (None, "fsdp", "model")),
+    (r"(lm_head|head)/w_fb$", ("model",)),
+    (r"_(fw|fb)$",           None),    # un-roled folds: replicate
+    (r"_(as|ws|s)$",         None),    # per-linear scales: replicate
     # embeddings / heads: shard vocab over model
     (r"embed/table$",        ("model", "fsdp")),
     (r"lm_head/w$",          ("fsdp", "model")),

@@ -89,6 +89,11 @@ _CACHE_RULES = {
     "m":    (None, AXIS_BATCH, None),
     "c":    (None, AXIS_BATCH, AXIS_MODEL),
     "pos":  (),
+    # paged KV pools (L, n_pages, page_size, n_kv, hd): heads over model,
+    # mirroring the dense split-KV rule (falls back to replication when the
+    # kv-head count does not divide the axis)
+    "pool_k": (None, None, None, AXIS_MODEL, None),
+    "pool_v": (None, None, None, AXIS_MODEL, None),
 }
 
 

@@ -20,7 +20,13 @@ projections as dense matmuls.  This module closes that gap:
     + weight bit-planes into ``(U, k, n)`` tensors and a bias once
     (core/decompose.fold_weights), and graft ``name_fw/fb/as/ws`` leaves
     onto the param tree.  At serve time ``nn.common.linear`` routes through
-    ``kernels/ops.encoded_matmul`` (mac mode 'encoded_infer').
+    ``kernels/ops.encoded_matmul`` (mac mode 'encoded_infer').  The fold
+    commutes with tensor parallelism (DESIGN.md §6): ``fw`` is elementwise
+    in (k, n), so placing it per the col/row sharding rules
+    (parallel/sharding) IS the per-shard fold — each device holds exactly
+    the fold of its weight shard; the row-parallel bias (a k-sum) stays
+    replicated and is added once after the psum of partial accumulations.
+    Every family's tensor-parallel role is recorded in the manifest.
  4. **cache** — the fitted encodings and folded weights are a versioned
     artifact bundle under ``core/artifacts/serving/<arch>-<key>/`` (via
     ``ckpt.save_array_tree``), so engine start-up is one load, not a search.
@@ -47,6 +53,7 @@ from repro.core.search import random_search, anneal
 from repro.data.synthetic import SyntheticLMDataset
 from repro.models import apply_model
 from repro.nn.common import set_activation_recorder
+from repro.parallel.sharding import linear_role
 from repro.quant.uniform import calibrate_scale, quantize_codes, \
     code_histogram, qmax
 from repro.ckpt import save_array_tree, load_array_tree
@@ -389,7 +396,8 @@ def prepare_encoded_serving(params, cfg, *, m_bits=48, n_samples: int = 128,
             "opts": {k: v for k, v in opts.items()},
             "families": {name: {"rmse": float(mac.spec.rmse),
                                 "m_bits": int(mac.spec.m_bits),
-                                "n_a_planes": mac.program.n_a_planes}
+                                "n_a_planes": mac.program.n_a_planes,
+                                "tp_role": linear_role(name)}
                          for name, mac in macs.items()},
         }
         # manifest last + atomically: it gates loading, so a crash anywhere
@@ -405,7 +413,8 @@ def prepare_encoded_serving(params, cfg, *, m_bits=48, n_samples: int = 128,
                            per_layer_s=False, macs=macs, backend=backend))
     n_folded = sum(1 for k in _flat_keys(delta) if k.endswith("_fw"))
     info = {"bundle_dir": bundle, "loaded": loaded, "n_folded": n_folded,
-            "families": {n: float(m.spec.rmse) for n, m in macs.items()}}
+            "families": {n: float(m.spec.rmse) for n, m in macs.items()},
+            "roles": {n: linear_role(n) for n in macs}}
     if verbose:
         src = "loaded" if loaded else "built"
         print(f"[encoded-serving] {src} bundle {bundle} "

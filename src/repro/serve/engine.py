@@ -20,9 +20,15 @@ Two serving modes:
 serve_step (decode) is THE lowered function for decode_* dry-run shapes:
 one new token against a KV cache of seq_len.  Caches are donated
 (buffer-reuse) and sequence-sharded over the model axis (DESIGN.md §5).
+
+Both engines take ``mesh=`` for tensor-parallel serving (DESIGN.md §6):
+params are placed per the path-based sharding rules (folded encoded
+tensors col/row-parallel over the model axis), paged pools split over kv
+heads, and every jitted step traces/runs under the mesh.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import time
 from typing import List, Optional
@@ -32,9 +38,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import apply_model, init_cache, supports_paged_cache
+from repro.parallel.sharding import param_specs, set_mesh
+from repro.parallel.statesharding import cache_specs
 from .paged_cache import PagedKVCache, pages_for
 from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
                         FINISHED)
+
+
+def _shard_params(params, mesh):
+    """Place params per the path-based rules (folded ``*_fw``/``*_fb``
+    encoded-serving tensors included — DESIGN.md §6)."""
+    return jax.device_put(params, param_specs(params, mesh))
+
+
+def _mesh_scope(mesh):
+    """Active-mesh scope for tracing/running jitted steps (model-code
+    ``constrain`` and the shard-local encoded kernel read it); no-op when
+    serving single-device."""
+    return set_mesh(mesh) if mesh is not None else contextlib.nullcontext()
 
 
 def make_prefill(cfg):
@@ -142,17 +163,27 @@ class Engine:
     def __init__(self, params, cfg, *, n_slots: int = 4,
                  page_size: int = 16, n_pages: int = 128,
                  max_seq_pages: Optional[int] = None,
-                 reserve: str = "conservative"):
+                 reserve: str = "conservative", mesh=None):
         if not supports_paged_cache(cfg):
             raise ValueError(
                 f"{cfg.arch!r} cannot serve paged; use ServeEngine")
         self.params, self.cfg = params, cfg
+        self.mesh = mesh
         if max_seq_pages is None:
             # default: one sequence may hold up to half the pool
             max_seq_pages = max(4, (n_pages - 1) // 2)
         self.kv = PagedKVCache(cfg, n_slots, n_pages, page_size,
                                max_seq_pages)
         self.sched = Scheduler(self.kv, reserve=reserve)
+        if mesh is not None:
+            # tensor-parallel serving (DESIGN.md §6): params per the
+            # path-based rules (folded encoded tensors shard col/row over
+            # the model axis), page pools split over kv heads; every jitted
+            # step below runs under the mesh so model-code constraints and
+            # the shard-local encoded kernel see it.
+            self.params = _shard_params(params, mesh)
+            self.kv.layers = jax.device_put(
+                self.kv.layers, cache_specs(self.kv.layers, mesh))
         self._prefill = jax.jit(make_paged_prefill(cfg),
                                 donate_argnums=(1,))
         self._step = jax.jit(make_paged_decode_step(cfg),
@@ -163,6 +194,9 @@ class Engine:
         self.metrics = {"steps": 0, "decode_tokens": 0,
                         "prefill_tokens": 0, "prefills": 0,
                         "occupancy_sum": 0.0}
+
+    def _mesh_ctx(self):
+        return _mesh_scope(self.mesh)
 
     # ---- API ---------------------------------------------------------------
 
@@ -223,9 +257,10 @@ class Engine:
                 self.kv.set_len(r.slot, r.n_cached)
         for req in active:
             tokens[req.slot, 0] = req.out[-1]
-        toks, self.kv.layers = self._step(
-            self.params, self.kv.layers, jnp.asarray(tokens),
-            self.kv.pages_dev(), self.kv.lens_dev())
+        with self._mesh_ctx():
+            toks, self.kv.layers = self._step(
+                self.params, self.kv.layers, jnp.asarray(tokens),
+                self.kv.pages_dev(), self.kv.lens_dev())
         toks = np.asarray(toks)
         now = time.perf_counter()
         for req in active:
@@ -255,10 +290,11 @@ class Engine:
         Sp = _bucket(plen)
         padded = np.zeros((1, Sp), np.int32)
         padded[0, :plen] = req.prompt
-        toks, self.kv.layers = self._prefill(
-            self.params, self.kv.layers, jnp.asarray(padded),
-            self.kv.pages_dev()[slot:slot + 1],
-            jnp.zeros((1,), jnp.int32))
+        with self._mesh_ctx():
+            toks, self.kv.layers = self._prefill(
+                self.params, self.kv.layers, jnp.asarray(padded),
+                self.kv.pages_dev()[slot:slot + 1],
+                jnp.zeros((1,), jnp.int32))
         now = time.perf_counter()
         first = int(np.asarray(toks)[0, plen - 1])
         req.n_cached = plen
@@ -300,6 +336,8 @@ class Engine:
             "n_pages": self.kv.n_pages,
             "n_slots": self.kv.n_slots,
             "mac_mode": self.cfg.mac.mode,
+            "mesh": (dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+                     if self.mesh is not None else None),
         })
         return m
 
@@ -318,8 +356,11 @@ class ServeEngine:
     """
 
     def __init__(self, params, cfg, batch_slots: int = 8,
-                 max_len: int = 512):
+                 max_len: int = 512, mesh=None):
         self.params, self.cfg = params, cfg
+        self.mesh = mesh
+        if mesh is not None:
+            self.params = _shard_params(params, mesh)
         self.max_len = max_len
         self.step = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
         self.prefill = jax.jit(make_prefill(cfg))
@@ -329,14 +370,15 @@ class ServeEngine:
             eos_id: Optional[int] = None) -> List[np.ndarray]:
         """Serve a list of prompt arrays; returns generated ids per request."""
         results = []
-        for i in range(0, len(requests), self.batch_slots):
-            chunk = requests[i:i + self.batch_slots]
-            S = max(len(r) for r in chunk)
-            batch = np.zeros((len(chunk), S), np.int32)
-            for j, r in enumerate(chunk):
-                batch[j, S - len(r):] = r          # left-pad
-            toks = generate(self.params, self.cfg, jnp.asarray(batch),
-                            max_new=max_new, max_len=S + max_new + 8 +
-                            (self.cfg.meta_tokens or 0), eos_id=eos_id)
-            results.extend(np.asarray(toks))
+        with _mesh_scope(self.mesh):
+            for i in range(0, len(requests), self.batch_slots):
+                chunk = requests[i:i + self.batch_slots]
+                S = max(len(r) for r in chunk)
+                batch = np.zeros((len(chunk), S), np.int32)
+                for j, r in enumerate(chunk):
+                    batch[j, S - len(r):] = r          # left-pad
+                toks = generate(self.params, self.cfg, jnp.asarray(batch),
+                                max_new=max_new, max_len=S + max_new + 8 +
+                                (self.cfg.meta_tokens or 0), eos_id=eos_id)
+                results.extend(np.asarray(toks))
         return results

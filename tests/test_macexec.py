@@ -1,0 +1,97 @@
+"""MAC backend registry (DESIGN.md §6): executor dispatch, suffix schemas,
+init behaviour, and the no-mode-string-chain guarantee in nn.common.linear."""
+import inspect
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.layers import MacConfig, dense_init, dense_apply
+from repro.core.mac import EncodedMac
+from repro.core.macexec import (MacExecutor, available_modes, get_executor,
+                                register)
+from repro.nn import common as C
+
+
+def _mac():
+    return EncodedMac.default()
+
+
+def test_registry_modes_and_unknown():
+    assert {"fp", "int8", "encoded", "encoded_infer"} <= set(available_modes())
+    with pytest.raises(ValueError, match="unknown MAC mode"):
+        get_executor("no-such-mode")
+    with pytest.raises(ValueError, match="unknown MAC mode"):
+        _ = MacConfig(mode="no-such-mode").executor
+
+
+@pytest.mark.parametrize("mode,suffixes", [
+    ("fp", set()),
+    ("int8", {"_as"}),
+    ("encoded", {"_s", "_as"}),
+])
+def test_suffix_schema_matches_init(mode, suffixes):
+    mcfg = MacConfig(mode=mode, bits=4,
+                     mac=_mac() if mode == "encoded" else None)
+    ex = get_executor(mode)
+    assert set(ex.param_suffixes) >= suffixes
+    p = C.linear_init(jax.random.PRNGKey(0), 8, 16, "wq", mcfg, bias=True)
+    assert set(p) == {"wq", "wq_b"} | {"wq" + s for s in suffixes}
+
+
+def test_encoded_infer_init_raises():
+    ex = get_executor("encoded_infer")
+    assert ex.requires_prepared_params
+    with pytest.raises(ValueError, match="prepare_encoded_serving"):
+        C.linear_init(jax.random.PRNGKey(0), 8, 16, "wq",
+                      MacConfig(mode="encoded_infer"))
+
+
+def test_linear_has_no_mode_chain():
+    """Acceptance: nn/common.linear dispatches through the registry — no
+    MAC mode if/elif chain at the call site."""
+    src = inspect.getsource(C.linear)
+    assert "elif" not in src
+    assert "mode ==" not in src and 'mode in' not in src
+    assert "executor" in src
+
+
+def test_fp_linear_matches_matmul():
+    key = jax.random.PRNGKey(1)
+    mcfg = MacConfig(mode="fp")
+    p = C.linear_init(key, 8, 4, "wi", mcfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 8))
+    np.testing.assert_allclose(np.asarray(C.linear(p, "wi", x, mcfg)),
+                               np.asarray(x @ p["wi"]), rtol=1e-6, atol=1e-6)
+
+
+def test_dense_aliases_roundtrip():
+    """EncodedDense keeps its historical 's'/'a_scale' names while routing
+    through the executor suffix schema."""
+    mcfg = MacConfig(mode="encoded", bits=4, mac=_mac())
+    p = dense_init(jax.random.PRNGKey(0), 8, 4, mcfg)
+    assert {"w", "s", "a_scale"} <= set(p)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 8))
+    out = dense_apply(p, x, mcfg)
+    assert out.shape == (5, 4)
+
+
+def test_third_party_executor_registers():
+    @register
+    class NegExecutor(MacExecutor):
+        mode = "test_neg"
+
+        def apply(self, p, name, x, mcfg, compute_dtype):
+            return -(x @ p[name]).astype(compute_dtype)
+
+    try:
+        mcfg = MacConfig(mode="test_neg")
+        p = C.linear_init(jax.random.PRNGKey(0), 4, 4, "wq", mcfg)
+        x = jnp.ones((2, 4))
+        np.testing.assert_allclose(np.asarray(C.linear(p, "wq", x, mcfg)),
+                                   -np.asarray(x @ p["wq"]),
+                                   rtol=1e-6, atol=1e-6)
+    finally:
+        from repro.core import macexec
+        macexec._REGISTRY.pop("test_neg", None)

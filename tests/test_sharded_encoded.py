@@ -1,0 +1,34 @@
+"""8-fake-device sharded encoded-MAC serving (DESIGN.md §6): engine decode
+on a model=8 mesh is greedy-token-identical to single-device, per-device
+folded-weight bytes shrink by the model-axis factor, and the shard-local
+kernel dispatch (column/row roles) matches the unsharded kernel.  Runs in a
+subprocess so xla_force_host_platform_device_count doesn't leak."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "sharded_encoded_script.py")
+CHECKS = ["sharded_encoded_decode_token_identical",
+          "sharded_encoded_fw_bytes_reduced",
+          "sharded_kernel_roles_match"]
+
+
+@pytest.fixture(scope="module")
+def sharded_encoded_output():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, SCRIPT], capture_output=True,
+                       text=True, timeout=1200, env=env)
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+@pytest.mark.parametrize("check", CHECKS)
+def test_sharded_encoded(sharded_encoded_output, check):
+    assert f"OK {check}" in sharded_encoded_output
+
+
+def test_all_passed(sharded_encoded_output):
+    assert "ALL_SHARDED_ENCODED_OK" in sharded_encoded_output
