@@ -5,6 +5,14 @@ mixed max_new) against (a) the continuous-batching paged-KV ``Engine`` and
 Records aggregate tokens/s, p50/p99 request latency, occupancy, and checks
 that paged greedy decode stays token-identical to the dense path.
 
+``--trace shared-prefix`` replays a Poisson trace whose prompts share a
+long common prefix (system-prompt traffic) through the engine with the
+prefix cache + chunked prefill enabled vs the cold engine at an equal page
+budget, reporting the prefix hit-rate, TTFT p50 for both paths, and the
+greedy token-identity check (``--smoke`` shrinks it for CI):
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --trace shared-prefix
+
 ``--mac encoded`` (or ``run_encoded()``) adds the accuracy-vs-throughput
 mode: the same trace replayed through the continuous engine with dense fp
 matmuls and with the calibrated encoded-MAC path (pre-folded bitplane
@@ -40,10 +48,25 @@ def _trace(cfg, rng):
     return reqs
 
 
-def _run_continuous(params, cfg, trace, n_pages, *, timed=True):
+def _shared_prefix_trace(cfg, rng, n_req, prefix_len, suffix_max):
+    """Poisson trace where every prompt opens with one shared prefix
+    (system prompt / few-shot template) followed by a unique suffix."""
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    reqs = []
+    t = 0.0
+    for _ in range(n_req):
+        slen = int(rng.integers(2, suffix_max + 1))
+        suffix = rng.integers(0, cfg.vocab_size, slen).astype(np.int32)
+        max_new = int(rng.integers(6, 13))
+        t += rng.exponential(1.0 / ARRIVAL_RATE)
+        reqs.append((np.concatenate([prefix, suffix]), max_new, t))
+    return reqs
+
+
+def _run_continuous(params, cfg, trace, n_pages, *, timed=True, **eng_kw):
     from repro.serve import Engine
     eng = Engine(params, cfg, n_slots=N_SLOTS, page_size=PAGE_SIZE,
-                 n_pages=n_pages)
+                 n_pages=n_pages, **eng_kw)
     t0 = time.perf_counter()
     pending = list(trace)
     rids = []
@@ -167,6 +190,99 @@ def csv_lines(res):
 
 
 # ---------------------------------------------------------------------------
+# prefix caching + chunked prefill: warm vs cold engine on shared prefixes
+# ---------------------------------------------------------------------------
+
+def run_prefix(smoke: bool = False, prefill_chunk: int = 8):
+    """Shared-prefix Poisson trace through the prefix-cached engine (warm)
+    vs the same engine without the cache (cold) at an equal page budget:
+    prefix hit-rate, TTFT p50/p99, and greedy token identity."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_model
+
+    n_req = 6 if smoke else 16
+    prefix_len = 24 if smoke else 48
+    suffix_max = 6 if smoke else 12
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(SEED)
+    trace = _shared_prefix_trace(cfg, rng, n_req, prefix_len, suffix_max)
+    total_tokens = sum(m for _, m, _ in trace)
+    budget_tokens = N_SLOTS * (prefix_len + suffix_max + 16 + 8)
+    n_pages = budget_tokens // PAGE_SIZE + 1                # +1 scratch
+    warm_kw = dict(prefix_cache=True, prefill_chunk=prefill_chunk)
+    cold_kw = dict(prefix_cache=False, prefill_chunk=prefill_chunk)
+
+    # warmup replays (absorb jit compiles for both engines)
+    _run_continuous(params, cfg, trace, n_pages, timed=False, **cold_kw)
+    _run_continuous(params, cfg, trace, n_pages, timed=False, **warm_kw)
+
+    eng_c, rids_c, wall_c = _run_continuous(params, cfg, trace, n_pages,
+                                            **cold_kw)
+    eng_w, rids_w, wall_w = _run_continuous(params, cfg, trace, n_pages,
+                                            **warm_kw)
+    st_c, st_w = eng_c.stats(), eng_w.stats()
+
+    # greedy outputs must be token-identical with and without the cache
+    res_c, res_w = eng_c.results(), eng_w.results()
+    identical = all(res_w[rw].tolist() == res_c[rc].tolist()
+                    for rw, rc in zip(rids_w, rids_c))
+
+    def _ttft(eng):
+        return sorted((r.t_first - r.t_arrive) for r in eng.requests.values()
+                      if r.t_first is not None)
+
+    ttft_c, ttft_w = _ttft(eng_c), _ttft(eng_w)
+    return {
+        "trace": {"n_requests": n_req, "arrival_rate_hz": ARRIVAL_RATE,
+                  "prefix_len": prefix_len, "suffix_max": suffix_max,
+                  "total_tokens": total_tokens, "page_size": PAGE_SIZE,
+                  "n_pages": n_pages, "n_slots": N_SLOTS,
+                  "prefill_chunk": prefill_chunk},
+        "cold": {
+            "tokens_per_s": total_tokens / wall_c,
+            "wall_s": wall_c,
+            "ttft_p50_s": _pct(ttft_c, 0.50),
+            "ttft_p99_s": _pct(ttft_c, 0.99),
+            "prefill_tokens": st_c["prefill_tokens"],
+            "prefill_chunks": st_c["prefill_chunks"],
+        },
+        "warm": {
+            "tokens_per_s": total_tokens / wall_w,
+            "wall_s": wall_w,
+            "ttft_p50_s": _pct(ttft_w, 0.50),
+            "ttft_p99_s": _pct(ttft_w, 0.99),
+            "prefill_tokens": st_w["prefill_tokens"],
+            "prefill_chunks": st_w["prefill_chunks"],
+            "prefix_hit_rate": st_w["prefix_hit_rate"],
+            "prefix_hit_tokens": st_w["prefix_hit_tokens"],
+            "prefix_pages_indexed": st_w["prefix_pages_indexed"],
+        },
+        "ttft_p50_speedup": (_pct(ttft_c, 0.50) / _pct(ttft_w, 0.50)
+                             if ttft_w and _pct(ttft_w, 0.50) > 0
+                             else float("nan")),
+        "prefill_tokens_saved": st_c["prefill_tokens"]
+        - st_w["prefill_tokens"],
+        "token_identical_warm_vs_cold": bool(identical),
+    }
+
+
+def csv_lines_prefix(res):
+    c, w = res["cold"], res["warm"]
+    return [
+        f"serving_prefix_hit_rate,0,{w['prefix_hit_rate']:.3f}",
+        f"serving_ttft_p50_cold_s,0,{c['ttft_p50_s']:.4f}",
+        f"serving_ttft_p50_warm_s,0,{w['ttft_p50_s']:.4f}",
+        f"serving_ttft_p50_speedup,0,{res['ttft_p50_speedup']:.3f}",
+        f"serving_prefill_tokens_saved,0,{res['prefill_tokens_saved']}",
+        f"serving_prefix_token_identical,0,"
+        f"{int(res['token_identical_warm_vs_cold'])}",
+    ]
+
+
+# ---------------------------------------------------------------------------
 # accuracy-vs-throughput: dense fp vs calibrated encoded-MAC serving
 # ---------------------------------------------------------------------------
 
@@ -279,6 +395,13 @@ def main():
     ap.add_argument("--mac", default="fp", choices=["fp", "encoded"],
                     help="fp = continuous-vs-static baseline bench; "
                          "encoded = dense-vs-encoded accuracy/throughput")
+    ap.add_argument("--trace", default="mixed",
+                    choices=["mixed", "shared-prefix"],
+                    help="mixed = the continuous-vs-static trace; "
+                         "shared-prefix = prefix-cache warm-vs-cold trace")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shared-prefix trace (CI smoke job)")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--m-bits", type=int, default=48)
     ap.add_argument("--calib-samples", type=int, default=128)
     ap.add_argument("--calib-refine", type=int, default=64)
@@ -288,7 +411,16 @@ def main():
         from .common import cached          # python -m benchmarks.serving_bench
     except ImportError:
         from common import cached           # python benchmarks/serving_bench.py
-    if args.mac == "encoded":
+    if args.trace == "shared-prefix":
+        # key carries smoke-ness AND the chunk size so flag changes never
+        # report another configuration's stale numbers
+        name = (f"serving_bench_prefix{'_smoke' if args.smoke else ''}"
+                f"_c{args.prefill_chunk}")
+        res = cached(name,
+                     lambda: run_prefix(args.smoke, args.prefill_chunk),
+                     force=args.force)
+        lines = csv_lines_prefix(res)
+    elif args.mac == "encoded":
         # cache key carries the search hyperparameters so flag changes
         # never report another configuration's stale numbers
         name = (f"serving_bench_encoded_m{args.m_bits}"

@@ -9,6 +9,12 @@ with the paper's encoded-MAC inference mode.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
       --continuous --slots 4 --page-size 16 --n-pages 256 --requests 16
 
+  # + prefix caching and chunked prefill (DESIGN.md §7): shared prompt
+  # prefixes are served from already-resident pages, long prompts prefill
+  # in fixed chunks interleaved with decode:
+  PYTHONPATH=src python -m repro.launch.serve --reduced --continuous \
+      --prefix-cache --prefill-chunk 32
+
   # calibrated encoded-MAC serving (calibrate → search → fold → serve; the
   # fitted encodings + folded weights are cached under
   # src/repro/core/artifacts/serving/ so later starts are one load):
@@ -57,6 +63,15 @@ def main():
     ap.add_argument("--n-pages", type=int, default=256)
     ap.add_argument("--reserve", default="conservative",
                     choices=["conservative", "optimistic"])
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="prefix caching (DESIGN.md §7): reuse pool pages "
+                         "holding full prompt pages already prefilled by "
+                         "earlier requests; only the uncached suffix is "
+                         "prefilled")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="prefill chunk size: prompts are prefilled in "
+                         "fixed chunks interleaved with decode steps, so "
+                         "long prompts never stall running slots")
     # encoded-serving knobs (ignored unless --mac encoded)
     ap.add_argument("--encoding", default="search",
                     choices=["search", "exact"],
@@ -137,7 +152,9 @@ def main():
     if args.continuous:
         engine = Engine(params, cfg, n_slots=args.slots,
                         page_size=args.page_size, n_pages=args.n_pages,
-                        reserve=args.reserve, mesh=mesh)
+                        reserve=args.reserve, mesh=mesh,
+                        prefix_cache=args.prefix_cache,
+                        prefill_chunk=args.prefill_chunk)
         t0 = time.time()
         rids = [engine.submit(r, max_new=args.max_new) for r in reqs]
         outs = engine.run()
@@ -150,6 +167,12 @@ def main():
               f"evictions={st['evictions']} "
               f"p50={st['latency_p50_s']:.3f}s p99={st['latency_p99_s']:.3f}s "
               f"kv_pool={st['kv_pool_bytes'] / 1e6:.1f}MB")
+        if args.prefix_cache:
+            print(f"  prefix: hit_rate={st['prefix_hit_rate']:.2f} "
+                  f"({st['prefix_hit_tokens']}/{st['prefix_lookup_tokens']} "
+                  f"tokens, {st['prefix_pages_indexed']} pages indexed, "
+                  f"{st['prefill_chunks']} prefill chunks of "
+                  f"{st['prefill_chunk']})")
         for i, rid in enumerate(rids[:3]):
             print(f"req{i}: {list(map(int, outs[rid][:10]))} ...")
         return

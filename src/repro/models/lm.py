@@ -103,7 +103,7 @@ def init_model(key, cfg):
 # layer-stack execution
 # ---------------------------------------------------------------------------
 
-_CTX_KEYS = ("pos", "pages", "lens")    # broadcast layer-cache context
+_CTX_KEYS = ("pos", "pages", "lens", "pad")  # broadcast layer-cache context
 
 
 def _strip_pos(tree):
@@ -318,9 +318,16 @@ def apply_model(params, cfg, tokens, *, img=None, enc_x=None, cache=None,
         x = jnp.concatenate([meta, x], axis=1)
         S = S + cfg.meta_tokens
     x = constrain(x, AXIS_BATCH, None, None)
+    pad = cache.get("pad") if (cache is not None and not paged) else None
     if paged:
         positions = pos0[:, None] + jnp.arange(S)[None, :]     # (B, S)
         ctx = {"pages": cache["pages"], "lens": cache["lens"]}
+    elif pad is not None:
+        # left-padded ragged batch: row b's tokens start at pad[b] pad
+        # slots, so its logical positions are slot - pad[b] (negative for
+        # the pads themselves — those keys are masked in attention)
+        positions = pos0 + jnp.arange(S)[None, :] - pad[:, None]
+        ctx = {"pos": pos0, "pad": pad}
     else:
         positions = pos0 + jnp.arange(S)
         ctx = {"pos": pos0}
@@ -351,6 +358,8 @@ def apply_model(params, cfg, tokens, *, img=None, enc_x=None, cache=None,
                      "lens": cache["lens"] + S}
     elif cache is not None:
         new_cache = {"pos": pos0 + S, "layers": new_layers}
+        if pad is not None:
+            new_cache["pad"] = pad
     if return_hidden:
         return logits, new_cache, aux, h
     return logits, new_cache, aux

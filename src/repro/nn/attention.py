@@ -103,16 +103,20 @@ def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
     kv_map = kv_of_q_map(cfg.n_heads, cfg.n_kv_heads, cfg.n_heads_p,
                          cfg.n_kv_p)
 
+    pad = cache.get("pad") if isinstance(cache, dict) else None
+
     def parallel_attn(q, k, v):
-        if cfg.flash_attention and window is None or \
-                (cfg.flash_attention and isinstance(window, int)):
+        if cfg.flash_attention and positions.ndim == 1 and (
+                window is None or isinstance(window, int)):
             from repro.kernels.ops import flash_mha
             return flash_mha(q, k, v, scale=scale, causal=True,
                              window=window if isinstance(window, int)
                              else None, cap=cfg.attn_softcap)
+        k_valid = None if pad is None else positions >= 0   # left-pad keys
         return mha(q, k, v, kv_map, scale=scale, q_pos=positions,
                    k_pos=positions, window=window, cap=cfg.attn_softcap,
-                   chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
+                   chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+                   k_valid=k_valid)
 
     new_cache = None
     if cache is None:
@@ -120,24 +124,21 @@ def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
     elif "pool_k" in cache:
         # paged serving path (repro.serve): write-through into the shared
         # page pool, then attend over the gathered page view.  ``positions``
-        # is (B, S) here (per-slot ragged lens from the scheduler).
+        # is (B, S) here (per-slot ragged lens from the scheduler), so
+        # decode (S == 1) and prefill chunks starting at arbitrary offsets
+        # (chunked prefill, partial-prefix prefill after a prefix-cache
+        # hit) share one code path: every query row sees all tokens cached
+        # for its slot plus its in-chunk causal prefix.
         pages, lens = cache["pages"], cache["lens"]
         pk = scatter_kv(cache["pool_k"], pages, positions, k)
         pv = scatter_kv(cache["pool_v"], pages, positions, v)
-        if S > 1:
-            # prefill: rows share a start offset (the engine prefills fresh
-            # slots, lens == 0) so a 1-D position vector masks correctly
-            out = mha(q, k, v, kv_map, scale=scale, q_pos=positions[0],
-                      k_pos=positions[0], window=window, cap=cfg.attn_softcap,
-                      chunk=cfg.attn_chunk, unroll=cfg.unroll_scans)
-        else:
-            ck, cv = gather_kv(pk, pages), gather_kv(pv, pages)
-            k_pos = jnp.arange(ck.shape[1])
-            k_valid = k_pos[None, :] < (lens + 1)[:, None]
-            out = paged_attn_decode(q, ck, cv, kv_map, scale=scale,
-                                    q_pos=positions, k_pos=k_pos,
-                                    k_valid=k_valid, window=window,
-                                    cap=cfg.attn_softcap)
+        ck, cv = gather_kv(pk, pages), gather_kv(pv, pages)
+        k_pos = jnp.arange(ck.shape[1])
+        k_valid = k_pos[None, :] < (lens + S)[:, None]
+        out = paged_attn_decode(q, ck, cv, kv_map, scale=scale,
+                                q_pos=positions, k_pos=k_pos,
+                                k_valid=k_valid, window=window,
+                                cap=cfg.attn_softcap)
         new_cache = {"pool_k": pk, "pool_v": pv}
     else:
         ck, cv, pos = cache["k"], cache["v"], cache["pos"]
@@ -157,6 +158,12 @@ def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
             Smax = ck.shape[1]
             k_pos = jnp.arange(Smax)
             k_valid = k_pos < (pos + S)
+            if pad is not None:
+                # left-padded batch: cache slot s holds the token at
+                # logical position s - pad (garbage for s < pad) — shift
+                # key positions per row and mask the pad slots
+                k_valid = k_valid[None, :] & (k_pos[None, :] >= pad[:, None])
+                k_pos = k_pos[None, :] - pad[:, None]
             out = mha(q, ck, cv, kv_map, scale=scale, q_pos=positions,
                       k_pos=k_pos, window=window, cap=cfg.attn_softcap,
                       chunk=0, k_valid=k_valid)

@@ -21,12 +21,33 @@ NEG_INF = -2.0e38
 
 
 def _mask(q_pos, k_pos, window, causal: bool = True):
-    """(Sq, Sk) boolean allow-mask from 1-D absolute positions."""
-    d = q_pos[:, None] - k_pos[None, :]
+    """Boolean allow-mask from absolute positions.
+
+    Positions may be shared across the batch (1-D ``(S,)``) or per-row
+    (2-D ``(B, S)`` — ragged left-padded batches, paged slots).  Returns
+    ``(Sq, Sk)`` for 1-D/1-D inputs (the historical shape) and
+    ``(B, Sq, Sk)`` as soon as either side is batched."""
+    if q_pos.ndim == 1 and k_pos.ndim == 1:
+        d = q_pos[:, None] - k_pos[None, :]
+    else:
+        qp = q_pos if q_pos.ndim > 1 else q_pos[None]
+        kp = k_pos if k_pos.ndim > 1 else k_pos[None]
+        d = qp[:, :, None] - kp[:, None, :]
     ok = d >= 0 if causal else jnp.ones_like(d, bool)
     if window is not None:
         ok = ok & (d < window)
     return ok
+
+
+def _apply_mask(lg, ok, k_valid):
+    """Mask logits ``lg (B,He,G,Sq,Ck)`` with ``ok`` ((Sq,Ck) shared or
+    (B,Sq,Ck) per-row) and optional ``k_valid`` ((Ck,) or (B,Ck))."""
+    if k_valid is not None:
+        kv = k_valid if k_valid.ndim > 1 else k_valid[None]   # (B|1, Ck)
+        ok = (ok if ok.ndim == 3 else ok[None]) & kv[:, None, :]
+    if ok.ndim == 2:
+        return jnp.where(ok[None, None, None], lg, NEG_INF)
+    return jnp.where(ok[:, None, None], lg, NEG_INF)
 
 
 def mha(q, k, v, kv_of_q: np.ndarray, *, scale: float,
@@ -79,16 +100,22 @@ def mha(q, k, v, kv_of_q: np.ndarray, *, scale: float,
         n_chunks = Sk // chunk
         ks = k.reshape(B, n_chunks, chunk, *k.shape[2:]).swapaxes(0, 1)
         vs = v.reshape(B, n_chunks, chunk, *v.shape[2:]).swapaxes(0, 1)
-        kpos = k_pos.reshape(n_chunks, chunk)
-        kval = (k_valid.reshape(n_chunks, chunk) if k_valid is not None
-                else jnp.ones((n_chunks, chunk), bool))
+        if k_pos.ndim > 1:                    # per-row key positions
+            kpos = k_pos.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+        else:
+            kpos = k_pos.reshape(n_chunks, chunk)
+        if k_valid is None:
+            kval = jnp.ones((n_chunks,) + kpos.shape[1:], bool)
+        elif k_valid.ndim > 1:
+            kval = k_valid.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+        else:
+            kval = k_valid.reshape(n_chunks, chunk)
 
         def body(carry, xs):
             m_i, l_i, acc = carry             # (B,He,G,Sq)×2, (B,Sq,He,G,Dv)
             kb, vb, kp, kvl = xs
             lg = softcap(logits_block(kb, True), cap)
-            ok = _mask(q_pos, kp, window, causal) & kvl[None, :]
-            lg = jnp.where(ok[None, None, None], lg, NEG_INF)
+            lg = _apply_mask(lg, _mask(q_pos, kp, window, causal), kvl)
             m_new = jnp.maximum(m_i, lg.max(-1))
             alpha = jnp.exp(m_i - m_new)
             pexp = jnp.exp(lg - m_new[..., None])
@@ -111,10 +138,7 @@ def mha(q, k, v, kv_of_q: np.ndarray, *, scale: float,
         out = acc / jnp.maximum(l_f, 1e-30).transpose(0, 3, 1, 2)[..., None]
     else:
         lg = softcap(logits_block(k, False), cap)
-        ok = _mask(q_pos, k_pos, window, causal)
-        if k_valid is not None:
-            ok = ok & k_valid[None, :]
-        lg = jnp.where(ok[None, None, None], lg, NEG_INF)
+        lg = _apply_mask(lg, _mask(q_pos, k_pos, window, causal), k_valid)
         p = jax.nn.softmax(lg, axis=-1)
         out = weighted_v(p, v, False)
     return out.reshape(B, Sq, Hq, Dv).astype(q.dtype)

@@ -13,8 +13,11 @@ indexed per sequence through a page table
     lens  : (B,) int32 — tokens already cached (positions < lens valid).
 
 Everything here is shape-static and jit/scan-safe; allocation policy
-(free list, admission, eviction) lives host-side in
-``repro.serve.paged_cache`` / ``repro.serve.scheduler``.
+(refcounted pages, prefix index, admission, eviction) lives host-side in
+``repro.serve.paged_cache`` / ``repro.serve.scheduler``.  The attention
+op takes per-row absolute positions, so decode steps and prefill chunks
+starting at arbitrary offsets (chunked prefill, partial-prefix prefill
+after a prefix-cache hit — DESIGN.md §7) share one code path.
 """
 from __future__ import annotations
 
@@ -52,14 +55,19 @@ def gather_kv(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
 
 def paged_attn_decode(q, k, v, kv_of_q: np.ndarray, *, scale: float,
                       q_pos, k_pos, k_valid, window=None, cap=None):
-    """Single-token decode attention over a gathered page view.
+    """Attention over a gathered page view with per-row positions.
 
-    q (B, 1, Hq, D); k/v (B, Sk, Hkv, D); q_pos (B, 1); k_pos (Sk,);
-    k_valid (B, Sk).  Mirrors the dense ``mha`` op order — grouped
-    (kv-head, group) layout, f32 accumulation, identical einsum strings —
-    so paged greedy decode stays token-identical to the dense-cache path.
-    Fully-masked rows (idle slots, lens == 0) stay finite because NEG_INF
-    is a finite f32 sentinel.
+    q (B, Sq, Hq, D); k/v (B, Sk, Hkv, D); q_pos (B, Sq); k_pos (Sk,);
+    k_valid (B, Sk).  ``Sq == 1`` is the decode step; ``Sq > 1`` is a
+    prefill chunk whose rows start at arbitrary per-slot offsets
+    (partial-prefix prefill after a prefix-cache hit, chunked prefill of
+    a long prompt) — the causal mask is evaluated in absolute positions,
+    so queries see every already-cached token plus the in-chunk prefix.
+    Mirrors the dense ``mha`` op order — grouped (kv-head, group) layout,
+    f32 accumulation, identical einsum strings — so paged greedy decode
+    stays token-identical to the dense-cache path.  Fully-masked rows
+    (idle slots, lens == 0) stay finite because NEG_INF is a finite f32
+    sentinel.
     """
     B, Sq, Hq, D = q.shape
     Hkv = k.shape[2]

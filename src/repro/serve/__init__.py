@@ -1,6 +1,7 @@
 from .engine import (make_prefill, make_decode_step, make_paged_prefill,
-                     make_paged_decode_step, generate, Engine, ServeEngine)
-from .paged_cache import PageAllocator, PagedKVCache, pages_for
+                     make_paged_decode_step, generate, Engine, ServeEngine,
+                     supports_ragged_mask)
+from .paged_cache import PageAllocator, PagedKVCache, PrefixIndex, pages_for
 from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
                         FINISHED, EVICTED)
 from .encoded import (prepare_encoded_serving, capture_activation_stats,

@@ -73,18 +73,52 @@ def make_decode_step(cfg):
     return decode_step
 
 
+def supports_ragged_mask(cfg) -> bool:
+    """Whether the left-pad masking path (``pad_lens``) is exact for this
+    arch: standard GQA attention over a dense cache.  MLA latents,
+    recurrent state (ssm/xlstm/hybrid), and meta tokens ingest pads into
+    state the attention mask cannot retroactively exclude — the same
+    plain-GQA-cache predicate as ``supports_paged_cache``.  Flash-kernel
+    prefill is excluded too: the masked path runs through ``mha``, whose
+    accumulation order differs from the flash kernel a solo run would
+    use, so bit-exact parity with per-request ``generate`` could not be
+    guaranteed."""
+    return supports_paged_cache(cfg) and not cfg.flash_attention
+
+
 def generate(params, cfg, prompts: jnp.ndarray, max_new: int = 16,
              max_len: Optional[int] = None, extras: Optional[dict] = None,
-             greedy: bool = True, key=None, eos_id: Optional[int] = None):
+             greedy: bool = True, key=None, eos_id: Optional[int] = None,
+             pad_lens=None):
     """Batched generation loop (greedy or temperature-1 sampling).
 
     ``eos_id``: rows that emit it are frozen — subsequent positions repeat
     ``eos_id`` (so finished sequences stop contributing new tokens) and the
     loop exits early once every row has finished.  Output stays (B, ≤max_new).
+
+    ``pad_lens`` (B,): per-row count of left-pad tokens for ragged batches.
+    Pad keys are masked out of attention and positions are offset so every
+    row computes exactly what it would alone (see ``supports_ragged_mask``).
+
+    The loop never runs a wasted decode step: logits are only computed for
+    tokens that will actually be appended, so a ``max_new``-token rollout
+    costs one prefill plus ``max_new - 1`` decode steps.
     """
     B, S = prompts.shape
     max_len = max_len or (S + max_new + (cfg.meta_tokens or 0))
     cache = init_cache(cfg, B, max_len)
+    if pad_lens is not None:
+        pad_lens = jnp.asarray(pad_lens, jnp.int32).ravel()
+        if not bool((pad_lens > 0).any()):
+            pad_lens = None                  # uniform batch: keep fast path
+        elif not supports_ragged_mask(cfg):
+            raise ValueError(
+                f"pad_lens: arch {cfg.arch!r} (family={cfg.family}, "
+                f"mla={cfg.use_mla}, meta={cfg.meta_tokens}, "
+                f"flash={cfg.flash_attention}) cannot mask left pads "
+                "exactly; batch equal-length prompts instead")
+        else:
+            cache["pad"] = pad_lens
     prefill = jax.jit(make_prefill(cfg))
     step = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
     logits, cache = prefill(params, cache, prompts, **(extras or {}))
@@ -96,6 +130,8 @@ def generate(params, cfg, prompts: jnp.ndarray, max_new: int = 16,
             tok = jnp.where(done, jnp.int32(eos_id), tok)
             done = done | (tok == eos_id)
         out.append(tok)
+        if i + 1 == max_new:                 # final token appended — the
+            break                            # next logits would be unused
         if eos_id is not None and bool(done.all()):
             break
         logits, cache = step(params, cache, tok)
@@ -113,8 +149,11 @@ def generate(params, cfg, prompts: jnp.ndarray, max_new: int = 16,
 # ---------------------------------------------------------------------------
 
 def make_paged_prefill(cfg):
-    """Prefill one right-padded prompt into its pages; returns per-position
-    greedy tokens (the engine picks index plen−1) + the updated pools."""
+    """Prefill one right-padded token chunk into its pages starting at
+    offset ``lens`` (0 for a fresh slot; the cached-token count for later
+    chunks of a chunked prefill or after a prefix-cache hit).  Returns
+    per-position greedy tokens (the engine picks the last prompt
+    position) + the updated pools."""
     def prefill(params, layers, tokens, pages, lens):
         cache = {"layers": layers, "pages": pages, "lens": lens}
         logits, nc, _ = apply_model(params, cfg, tokens, cache=cache)
@@ -134,12 +173,27 @@ def make_paged_decode_step(cfg):
     return step
 
 
-def _bucket(n: int, lo: int = 8) -> int:
-    """Next power-of-two prompt bucket (bounds prefill recompiles)."""
-    b = lo
-    while b < n:
-        b *= 2
-    return b
+@functools.lru_cache(maxsize=32)
+def _jitted_paged_steps_cached(cfg, mesh):
+    return (jax.jit(make_paged_prefill(cfg), donate_argnums=(1,)),
+            jax.jit(make_paged_decode_step(cfg), donate_argnums=(1,)))
+
+
+def _jitted_paged_steps(cfg, mesh):
+    """Jitted (prefill, decode) pair memoized per (frozen, hashable) cfg
+    and mesh: jax.jit caches on function identity, so without this every
+    Engine wraps brand-new closures and re-traces/re-compiles — warmup
+    engines could never absorb the compile cost for the engine being
+    timed.  The mesh is part of the key because model-code ``constrain``
+    and the shard-local encoded kernel read the active mesh at trace
+    time — a no-mesh trace must never be reused under a mesh.  Configs
+    with unhashable leaves (e.g. ``encoded_infer``'s per-family ``macs``
+    dict) fall back to per-engine jit — the pre-memoization behavior."""
+    try:
+        return _jitted_paged_steps_cached(cfg, mesh)
+    except TypeError:
+        return (jax.jit(make_paged_prefill(cfg), donate_argnums=(1,)),
+                jax.jit(make_paged_decode_step(cfg), donate_argnums=(1,)))
 
 
 # ---------------------------------------------------------------------------
@@ -150,31 +204,45 @@ class Engine:
     """Continuous-batching greedy serving engine over the paged KV cache.
 
     Static shapes throughout: decode compiles once for (n_slots, 1) tokens;
-    prefill compiles once per power-of-two prompt bucket (B=1, padded right
-    — padded writes land in the scratch page or are overwritten by later
-    decode steps before they become readable).
+    prefill compiles ONCE for the fixed ``(1, prefill_chunk)`` chunk shape
+    (padded right — padded writes land in the scratch page or are
+    overwritten before they become readable).  Long prompts are prefilled
+    one chunk per engine step, interleaved with decode steps for the other
+    slots, so a long prefill never freezes every decoding slot (chunked
+    prefill; DESIGN.md §7).
+
+    ``prefix_cache=True`` enables vLLM-style prefix caching: full prompt
+    pages are hash-indexed after prefill, and admission maps matching
+    cached pages into a new request's page table (refcount-shared) so only
+    the uncached suffix is prefilled.
 
     ``reserve='conservative'`` admits a request only when pages for
     prompt+max_new are free (no mid-flight exhaustion);
     ``reserve='optimistic'`` admits on prompt pages alone and grows
-    page-by-page, evicting the youngest running request on exhaustion.
+    page-by-page, reclaiming unreferenced cached pages and then evicting
+    the youngest running request on exhaustion.
     """
 
     def __init__(self, params, cfg, *, n_slots: int = 4,
                  page_size: int = 16, n_pages: int = 128,
                  max_seq_pages: Optional[int] = None,
-                 reserve: str = "conservative", mesh=None):
+                 reserve: str = "conservative", mesh=None,
+                 prefill_chunk: int = 32, prefix_cache: bool = False):
         if not supports_paged_cache(cfg):
             raise ValueError(
                 f"{cfg.arch!r} cannot serve paged; use ServeEngine")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.params, self.cfg = params, cfg
         self.mesh = mesh
+        self.prefill_chunk = prefill_chunk
         if max_seq_pages is None:
             # default: one sequence may hold up to half the pool
             max_seq_pages = max(4, (n_pages - 1) // 2)
         self.kv = PagedKVCache(cfg, n_slots, n_pages, page_size,
                                max_seq_pages)
-        self.sched = Scheduler(self.kv, reserve=reserve)
+        self.sched = Scheduler(self.kv, reserve=reserve,
+                               prefix_cache=prefix_cache)
         if mesh is not None:
             # tensor-parallel serving (DESIGN.md §6): params per the
             # path-based rules (folded encoded tensors shard col/row over
@@ -184,16 +252,13 @@ class Engine:
             self.params = _shard_params(params, mesh)
             self.kv.layers = jax.device_put(
                 self.kv.layers, cache_specs(self.kv.layers, mesh))
-        self._prefill = jax.jit(make_paged_prefill(cfg),
-                                donate_argnums=(1,))
-        self._step = jax.jit(make_paged_decode_step(cfg),
-                             donate_argnums=(1,))
+        self._prefill, self._step = _jitted_paged_steps(cfg, mesh)
         self.requests = {}
         self._next_rid = 0
         self.clock = 0                     # logical steps
         self.metrics = {"steps": 0, "decode_tokens": 0,
                         "prefill_tokens": 0, "prefills": 0,
-                        "occupancy_sum": 0.0}
+                        "prefill_chunks": 0, "occupancy_sum": 0.0}
 
     def _mesh_ctx(self):
         return _mesh_scope(self.mesh)
@@ -230,28 +295,40 @@ class Engine:
     # ---- one scheduler tick ------------------------------------------------
 
     def step(self) -> None:
-        self._admit()
-        active = self._runnable()
         self.metrics["steps"] += 1
         self.clock += 1
-        self.metrics["occupancy_sum"] += len(active) / self.kv.n_slots
-        if not active:
-            if not self.sched.queue:
-                return
-            # a prefill may have finished at its first token and freed
-            # pages mid-_admit; try once more before declaring starvation
+        # admit and run ONE prefill chunk per prefilling slot; a short
+        # prefill that completes and finishes at EOS frees its slot and
+        # pages, so keep admitting until no new slot fills (each request
+        # still runs at most one chunk this step)
+        chunked = set()
+        while True:
             self._admit()
-            active = self._runnable()
-            if not active:
-                if self.sched.queue:
-                    raise RuntimeError(
-                        "page pool too small for the queued request "
-                        f"(need {self.sched._pages_needed(self.sched.queue[0])}"
-                        f" pages, {self.kv.alloc.n_free} free)")
-                return
+            todo = [r for r in self.sched.prefilling()
+                    if r.rid not in chunked]
+            if not todo:
+                break
+            for req in todo:
+                chunked.add(req.rid)
+                self._prefill_chunk(req)
+        active = self._runnable()
+        # occupancy counts every slot that did work this step: decoding
+        # slots plus slots that ran a prefill chunk (a request that
+        # finished its prefill and decodes in the same step counts once)
+        worked = set(chunked) | {r.rid for r in active}
+        self.metrics["occupancy_sum"] += len(worked) / self.kv.n_slots
+        if not active:
+            if chunked or not self.sched.queue:
+                return                     # prefill progress / fully idle
+            raise RuntimeError(
+                "page pool too small for the queued request "
+                f"(need {self.sched._pages_needed(self.sched.queue[0])}"
+                f" pages, {self.kv.alloc.n_free} free)")
         tokens = np.zeros((self.kv.n_slots, 1), np.int32)
         # refresh lens for every slotted request (stalled ones included, so
-        # their dummy write this step lands past their pages → scratch)
+        # their dummy write this step lands past their pages → scratch;
+        # mid-prefill slots' dummy write lands at their cursor and is
+        # overwritten by their next chunk before it is ever read)
         for r in self.sched.slots:
             if r is not None:
                 self.kv.set_len(r.slot, r.n_cached)
@@ -271,8 +348,7 @@ class Engine:
                 self.sched.finish(req, now)
 
     def _admit(self) -> None:
-        for slot, req in self.sched.admissions():
-            self._run_prefill(slot, req)
+        self.sched.admissions()
 
     def _runnable(self):
         """Decoding requests with a page for their next write, oldest first
@@ -285,26 +361,44 @@ class Engine:
                 out.append(req)
         return out
 
-    def _run_prefill(self, slot: int, req: Request) -> None:
-        plen = req.plen
-        Sp = _bucket(plen)
-        padded = np.zeros((1, Sp), np.int32)
-        padded[0, :plen] = req.prompt
+    def _prefill_chunk(self, req: Request) -> None:
+        """Run one fixed-shape prefill chunk for a PREFILLING request,
+        starting at its cursor (``n_cached`` — nonzero after a prefix-cache
+        hit or for later chunks).  On the final chunk the request flips to
+        DECODING; a fresh request takes its first token from the last
+        prompt position, while a re-admitted evicted request keeps the
+        tokens it already generated (``prefill_stream`` re-ingests them)
+        and its original ``t_first``."""
+        stream = req.prefill_stream()
+        target = req.prefill_target
+        start = req.n_cached
+        C = self.prefill_chunk
+        chunk = stream[start:start + C]
+        n = int(chunk.shape[0])
+        padded = np.zeros((1, C), np.int32)
+        padded[0, :n] = chunk
+        slot = req.slot
         with self._mesh_ctx():
             toks, self.kv.layers = self._prefill(
                 self.params, self.kv.layers, jnp.asarray(padded),
                 self.kv.pages_dev()[slot:slot + 1],
-                jnp.zeros((1,), jnp.int32))
+                jnp.asarray([start], jnp.int32))
+        req.n_cached = start + n
+        self.kv.set_len(slot, req.n_cached)
+        self.metrics["prefill_chunks"] += 1
+        self.metrics["prefill_tokens"] += n
+        if req.n_cached < target:
+            return                          # more chunks to go
         now = time.perf_counter()
-        first = int(np.asarray(toks)[0, plen - 1])
-        req.n_cached = plen
-        req.out = [first]
-        req.t_first = now
         req.state = DECODING
-        self.kv.set_len(slot, plen)
         self.metrics["prefills"] += 1
-        self.metrics["prefill_tokens"] += plen
-        if req.done:                       # eos on the very first token
+        self.sched.note_prefilled(req)      # prompt pages → prefix index
+        if not req.out:
+            first = int(np.asarray(toks)[0, req.plen - 1 - start])
+            req.out = [first]
+            if req.t_first is None:         # honest TTFT across evictions
+                req.t_first = now
+        if req.done:                        # eos on the very first token
             self.sched.finish(req, now)
 
     # ---- reporting ---------------------------------------------------------
@@ -322,10 +416,19 @@ class Engine:
             i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
             return xs[i]
 
+        pfx = self.sched.prefix
+        on = pfx is not None        # NOT truthiness — an empty index is falsy
         m = dict(self.metrics)
         m.update({
             "finished": len(fin),
             "evictions": self.sched.n_evictions,
+            "cow_copies": self.sched.n_cow_copies,
+            "prefix_cache": on,
+            "prefix_hit_tokens": pfx.hit_tokens if on else 0,
+            "prefix_lookup_tokens": pfx.lookup_tokens if on else 0,
+            "prefix_hit_rate": pfx.hit_rate if on else 0.0,
+            "prefix_pages_indexed": len(pfx) if on else 0,
+            "prefill_chunk": self.prefill_chunk,
             "occupancy": (m["occupancy_sum"] / m["steps"]
                           if m["steps"] else 0.0),
             "latency_p50_s": pct(lat, 0.50),
@@ -368,17 +471,28 @@ class ServeEngine:
 
     def run(self, requests: List[np.ndarray], max_new: int = 32,
             eos_id: Optional[int] = None) -> List[np.ndarray]:
-        """Serve a list of prompt arrays; returns generated ids per request."""
+        """Serve a list of prompt arrays; returns generated ids per request.
+
+        Ragged prompts are left-padded to the chunk's longest; where the
+        arch supports it (``supports_ragged_mask``) the pad slots are
+        masked out of attention and positions offset per row, so each
+        request decodes exactly as it would alone.  Archs whose state
+        ingests pads (MLA, ssm/xlstm hybrids, meta tokens) keep the
+        unmasked behavior — batch equal-length prompts for exactness."""
         results = []
+        ragged_ok = supports_ragged_mask(self.cfg)
         with _mesh_scope(self.mesh):
             for i in range(0, len(requests), self.batch_slots):
                 chunk = requests[i:i + self.batch_slots]
                 S = max(len(r) for r in chunk)
                 batch = np.zeros((len(chunk), S), np.int32)
+                pad = np.zeros((len(chunk),), np.int32)
                 for j, r in enumerate(chunk):
                     batch[j, S - len(r):] = r          # left-pad
+                    pad[j] = S - len(r)
                 toks = generate(self.params, self.cfg, jnp.asarray(batch),
                                 max_new=max_new, max_len=S + max_new + 8 +
-                                (self.cfg.meta_tokens or 0), eos_id=eos_id)
+                                (self.cfg.meta_tokens or 0), eos_id=eos_id,
+                                pad_lens=pad if ragged_ok else None)
                 results.extend(np.asarray(toks))
         return results

@@ -1,21 +1,35 @@
-"""Host-side paged-KV management: free-list page allocator + slot state.
+"""Host-side paged-KV management: refcounted page allocator, the prefix
+index (vLLM-style prefix caching), and the device-pool wrapper.
 
 Device-side layout and the attention ops live in ``repro.nn.paged`` /
 ``repro.models.init_paged_cache``; this module owns the mutable host
 state the scheduler works against:
 
-  * ``PageAllocator`` — a free list over pool page ids.  Page 0 is the
+  * ``PageAllocator`` — refcounted allocation over pool page ids with an
+    LRU *cached* tier: a page whose refcount drops to zero but whose
+    contents are registered in the prefix index becomes reusable-but-
+    evictable instead of free.  ``alloc`` consumes free pages first and
+    only then evicts cached pages (dropping their index entries via the
+    ``on_evict`` callback), so unreferenced cached pages are always
+    reclaimed before any running request is preempted.  Page 0 is the
     reserved *scratch* page (padded/idle writes land there), so ids
     handed out are in ``[1, n_pages)``.
+  * ``PrefixIndex`` — maps hash-chained full pages of prompt tokens to
+    the pool page holding their K/V, so admission can map already-cached
+    prefix pages into a new request's page table and skip prefilling
+    those tokens (DESIGN.md §7).
   * ``PagedKVCache`` — the device pools plus per-slot page tables and
     lengths (numpy, mirrored to device each engine step).
 """
 from __future__ import annotations
 
+import hashlib
 import math
-from typing import List, Optional
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.models import init_paged_cache, supports_paged_cache
@@ -27,38 +41,207 @@ def pages_for(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """LIFO free-list allocator over pool pages [1, n_pages).
+    """Refcounted LIFO allocator over pool pages [1, n_pages).
+
+    Lifecycle of a page::
+
+        free ──alloc──▶ held (ref 1) ──retain──▶ shared (ref k)
+          ▲                  │ free (ref→0)
+          │     unregistered │          registered in the prefix index
+          └──────────────────┴──▶ cached (LRU) ──alloc evicts──▶ held
 
     ``alloc`` is all-or-nothing (returns None when the request can't be
-    covered) so admission control never partially commits a sequence."""
+    covered) so admission control never partially commits a sequence.
+    ``mark_cached``/``on_evict`` are the prefix index's hooks: marked
+    pages park in the cached LRU at ref 0 instead of the free list, and
+    eviction (oldest first) notifies the index to drop its entry."""
 
-    def __init__(self, n_pages: int):
+    def __init__(self, n_pages: int,
+                 on_evict: Optional[Callable[[int], None]] = None):
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is scratch)")
         self.n_pages = n_pages
+        self.on_evict = on_evict
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
-        self._held = set()
+        self._ref: Dict[int, int] = {}
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
+        self._cacheable = set()
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        """Allocatable pages: truly free + evictable cached."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def n_cached(self) -> int:
+        return len(self._cached)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        return n <= self.n_free
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        if n > len(self._free):
+        if n > self.n_free:
             return None
-        out = [self._free.pop() for _ in range(n)]
-        self._held.update(out)
+        out = []
+        for _ in range(n):
+            if self._free:
+                p = self._free.pop()
+            else:                           # evict LRU cached page
+                p, _ = self._cached.popitem(last=False)
+                self._cacheable.discard(p)
+                if self.on_evict is not None:
+                    self.on_evict(p)
+            self._ref[p] = 1
+            out.append(p)
         return out
 
+    def retain(self, page: int) -> None:
+        """Add a reference: share a held page, or revive a cached one."""
+        if page in self._cached:
+            del self._cached[page]
+            self._ref[page] = 1
+            return
+        if self._ref.get(page, 0) < 1:
+            raise ValueError(f"retain of unheld page {page}")
+        self._ref[page] += 1
+
     def free(self, pages: List[int]) -> None:
-        for p in pages:
-            if p not in self._held:
+        """Drop one reference per page; a page reaching refcount 0 parks
+        in the cached LRU if the prefix index registered it, else returns
+        to the free list.  Pages are processed in REVERSE argument order:
+        a sequence frees its pages in chain order, so reversing parks the
+        chain tail first → LRU eviction reclaims tails before heads, and
+        a surviving head keeps its (still-matchable) chain prefix alive
+        instead of orphaning unmatchable tail entries."""
+        for p in reversed(pages):
+            if self._ref.get(p, 0) < 1:
                 raise ValueError(f"double/foreign free of page {p}")
-            self._held.discard(p)
-            self._free.append(p)
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                if p in self._cacheable:
+                    self._cached[p] = None
+                else:
+                    self._free.append(p)
+
+    def mark_cached(self, page: int) -> None:
+        """Flag a page's contents as index-registered (prefix-reusable)."""
+        self._cacheable.add(page)
+
+    def unmark_cached(self, page: int) -> None:
+        self._cacheable.discard(page)
+        if page in self._cached:            # no index entry left → free
+            del self._cached[page]
+            self._free.append(page)
+
+
+class PrefixIndex:
+    """Host-side prefix cache: full immutable pages of prompt tokens,
+    keyed by a hash chain, mapped to the pool page holding their K/V.
+
+    The chain key of page ``i`` is a SHA-256 digest chained over the
+    parent digest and the page's raw token bytes, so it commits to *all*
+    tokens in pages ``0..i`` — a page can only be reused when the entire
+    prefix up to and including it matches (collision-proof in practice,
+    and deterministic across processes, unlike builtin ``hash``).
+    ``match`` retains every returned page (caller must ``free`` them
+    through the allocator, like any other held page); at least one token
+    is always left unmatched so the last-token logits that seed decoding
+    are recomputed.
+    """
+
+    def __init__(self, alloc: PageAllocator, page_size: int):
+        self.alloc = alloc
+        self.page_size = page_size
+        self._pages: Dict[bytes, int] = {}      # chain digest → page id
+        self._keys: Dict[int, bytes] = {}       # page id → chain digest
+        alloc.on_evict = self.drop_page
+        self.hit_tokens = 0
+        self.lookup_tokens = 0
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+    def chain_keys(self, tokens: np.ndarray) -> List[bytes]:
+        """Chain digest for each full page of ``tokens``.  A pure function
+        of the (immutable) prompt — callers memoize it per request so a
+        head-of-line request blocked on pages doesn't re-hash its whole
+        prompt every scheduler tick."""
+        ps = self.page_size
+        keys: List[bytes] = []
+        h = b""
+        for i in range(len(tokens) // ps):
+            blk = np.asarray(tokens[i * ps:(i + 1) * ps], np.int32).tobytes()
+            h = hashlib.sha256(h + blk).digest()
+            keys.append(h)
+        return keys
+
+    def match(self, tokens: np.ndarray, n_target: Optional[int] = None,
+              keys: Optional[List[bytes]] = None) -> List[int]:
+        """Longest cached page-chain prefix of ``tokens``, capped so at
+        least one of the first ``n_target`` (default ``len(tokens)``)
+        tokens remains to prefill.  Every returned page is retained.
+
+        Does NOT touch the hit/lookup counters — the caller commits them
+        with ``record`` only when the admission actually goes through, so
+        a head-of-line request re-matched every step while blocked on
+        pages doesn't inflate the reported hit rate."""
+        n_target = len(tokens) if n_target is None else n_target
+        cap = max(0, (n_target - 1) // self.page_size)
+        if keys is None:
+            keys = self.chain_keys(tokens)
+        out: List[int] = []
+        for i, key in enumerate(keys):
+            if i >= cap:
+                break
+            page = self._pages.get(key)
+            if page is None:
+                break
+            self.alloc.retain(page)
+            out.append(page)
+        return out
+
+    def record(self, n_hit_pages: int, n_target: int) -> None:
+        """Commit one admission's hit/lookup token counts to the stats."""
+        self.lookup_tokens += n_target
+        self.hit_tokens += n_hit_pages * self.page_size
+
+    def insert(self, tokens: np.ndarray, pages: List[int],
+               keys: Optional[List[bytes]] = None) -> int:
+        """Register the full-page prefix of ``tokens`` living in
+        ``pages`` (a prefilled request's page list).  Pages already
+        registered under the same key are skipped (first writer wins).
+        Returns the number of newly indexed pages."""
+        added = 0
+        if keys is None:
+            keys = self.chain_keys(tokens)
+        for i, key in enumerate(keys):
+            if i >= len(pages):
+                break
+            if key in self._pages:
+                continue                    # another request got there first
+            page = pages[i]
+            if page in self._keys:          # page already backs another key
+                continue
+            self._pages[key] = page
+            self._keys[page] = key
+            self.alloc.mark_cached(page)
+            added += 1
+        return added
+
+    def drop_page(self, page: int) -> None:
+        key = self._keys.pop(page, None)
+        if key is not None:
+            self._pages.pop(key, None)
+        self.alloc.unmark_cached(page)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hit_tokens / self.lookup_tokens if self.lookup_tokens \
+            else 0.0
 
 
 class PagedKVCache:
@@ -98,6 +281,13 @@ class PagedKVCache:
     def reset_slot(self, slot: int) -> None:
         self.ptab[slot] = 0
         self.lens[slot] = 0
+
+    def copy_page(self, src: int, dst: int) -> None:
+        """Copy-on-write support: duplicate one pool page on device (every
+        layer stage, k and v).  Rare — only taken when a write would land
+        in a page shared with another sequence."""
+        self.layers = jax.tree_util.tree_map(
+            lambda a: a.at[:, dst].set(a[:, src]), self.layers)
 
     def pages_dev(self) -> jnp.ndarray:
         return jnp.asarray(self.ptab)

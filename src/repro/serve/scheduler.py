@@ -1,23 +1,34 @@
 """Continuous-batching scheduler: request queue, admission under a page
-budget, per-request lifecycle, page growth with eviction fallback.
+budget, prefix-cache page reuse, per-request lifecycle, page growth with
+eviction fallback.
 
 Request states::
 
     queued → prefilling → decoding → finished
                  ↑____________|  (evicted: pages freed, requeued at the
-                                  front, prefill restarts from scratch)
+                                  front; generated tokens are KEPT and
+                                  re-prefilled on re-admission)
 
 Admission is FCFS (head-of-line blocking keeps latency fair); the page
 reservation policy is either
 
   * ``conservative`` — reserve pages for ``len(prompt) + max_new`` at
     admission, so a running sequence can never run out of pages, or
-  * ``optimistic``  — reserve only the prompt's pages and grow page-by-
-    page during decode; on exhaustion the youngest other running request
-    is evicted (vLLM-style recompute preemption).
+  * ``optimistic``  — reserve only the pages for the tokens that must be
+    cached and grow page-by-page during decode; on exhaustion,
+    unreferenced prefix-cached pages are reclaimed first (the allocator's
+    LRU cached tier), and only then is the youngest other running request
+    evicted (vLLM-style recompute preemption).
+
+With ``prefix_cache=True`` admission consults the ``PrefixIndex``
+(DESIGN.md §7): full prompt pages already resident in the pool are mapped
+into the new request's page table (refcount shared) and only the
+remaining suffix is prefilled.
 
 The scheduler is pure host-side bookkeeping — it never touches device
-arrays.  The engine drives it and owns the jitted prefill/decode steps.
+arrays (the one exception is copy-on-write page duplication, delegated to
+``PagedKVCache.copy_page``).  The engine drives it and owns the jitted
+prefill/decode steps.
 """
 from __future__ import annotations
 
@@ -27,7 +38,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from .paged_cache import PagedKVCache, pages_for
+from .paged_cache import PagedKVCache, PrefixIndex, pages_for
 
 QUEUED, PREFILLING, DECODING, FINISHED, EVICTED = (
     "queued", "prefilling", "decoding", "finished", "evicted")
@@ -48,10 +59,29 @@ class Request:
     t_arrive: float = 0.0
     t_first: Optional[float] = None    # first generated token (wall)
     t_finish: Optional[float] = None
+    # memoized prefix-index chain digests of the (immutable) prompt, so a
+    # blocked head-of-line request isn't re-hashed every scheduler tick
+    prefix_keys: Optional[List[bytes]] = dataclasses.field(
+        default=None, repr=False)
 
     @property
     def plen(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def prefill_target(self) -> int:
+        """Tokens that must be in the KV pool before decode (re)starts:
+        the prompt plus every generated token except the last — the last
+        output token is the next decode step's input."""
+        return self.plen + max(0, len(self.out) - 1)
+
+    def prefill_stream(self) -> np.ndarray:
+        """The token stream prefill ingests (prompt, then any generated
+        tokens an eviction preserved, minus the final one)."""
+        if not self.out:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out[:-1], np.int32)])
 
     @property
     def done(self) -> bool:
@@ -63,14 +93,18 @@ class Request:
 class Scheduler:
     """FCFS continuous-batching scheduler over a PagedKVCache."""
 
-    def __init__(self, kv: PagedKVCache, reserve: str = "conservative"):
+    def __init__(self, kv: PagedKVCache, reserve: str = "conservative",
+                 prefix_cache: bool = False):
         if reserve not in ("conservative", "optimistic"):
             raise ValueError(f"unknown reserve policy {reserve!r}")
         self.kv = kv
         self.reserve = reserve
+        self.prefix: Optional[PrefixIndex] = (
+            PrefixIndex(kv.alloc, kv.page_size) if prefix_cache else None)
         self.queue: deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * kv.n_slots
         self.n_evictions = 0
+        self.n_cow_copies = 0
 
     # ---- queue / slots -----------------------------------------------------
 
@@ -86,6 +120,10 @@ class Scheduler:
     def active(self) -> List[Request]:
         return [r for r in self.slots if r is not None and r.state == DECODING]
 
+    def prefilling(self) -> List[Request]:
+        return [r for r in self.slots
+                if r is not None and r.state == PREFILLING]
+
     @property
     def busy(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slots)
@@ -93,41 +131,89 @@ class Scheduler:
     def _pages_needed(self, req: Request) -> int:
         if self.reserve == "conservative":
             return pages_for(req.plen + req.max_new, self.kv.page_size)
-        return pages_for(req.plen, self.kv.page_size)
+        return pages_for(req.prefill_target, self.kv.page_size)
 
     def admissions(self) -> List[Tuple[int, Request]]:
-        """Admit queued requests into free slots while pages last (FCFS)."""
+        """Admit queued requests into free slots while pages last (FCFS).
+
+        With the prefix index enabled, cached full prompt pages are mapped
+        (shared, refcounted) into the request's page table first and only
+        the remainder is freshly allocated; ``req.n_cached`` starts at the
+        hit length so the engine prefills only the suffix."""
         out = []
         free = [i for i, r in enumerate(self.slots) if r is None]
         while self.queue and free:
             req = self.queue[0]
-            pages = self.kv.alloc.alloc(self._pages_needed(req))
+            cached: List[int] = []
+            if self.prefix is not None:
+                if req.prefix_keys is None:
+                    req.prefix_keys = self.prefix.chain_keys(req.prompt)
+                cached = self.prefix.match(req.prompt, req.prefill_target,
+                                           keys=req.prefix_keys)
+            pages = self.kv.alloc.alloc(self._pages_needed(req) - len(cached))
             if pages is None:
+                if cached:                   # undo the retains; pages return
+                    self.kv.alloc.free(cached)   # to the cached LRU tier
                 break                        # head-of-line: wait for pages
             self.queue.popleft()
             slot = free.pop(0)
-            req.slot, req.pages, req.state = slot, pages, PREFILLING
-            req.out, req.n_cached = [], 0
+            if self.prefix is not None:
+                self.prefix.record(len(cached), req.prefill_target)
+            req.slot, req.state = slot, PREFILLING
+            req.pages = cached + pages
+            # prefill cursor starts past the mapped prefix pages: only
+            # the uncached suffix is ever prefilled
+            req.n_cached = len(cached) * self.kv.page_size
             self.slots[slot] = req
-            self.kv.set_pages(slot, pages)
-            self.kv.set_len(slot, 0)
+            self.kv.set_pages(slot, req.pages)
+            self.kv.set_len(slot, req.n_cached)
             out.append((slot, req))
         return out
+
+    def note_prefilled(self, req: Request) -> None:
+        """Register a fully-prefilled request's full prompt pages in the
+        prefix index (its K/V is now valid and immutable page-by-page)."""
+        if self.prefix is not None:
+            self.prefix.insert(req.prompt, req.pages, keys=req.prefix_keys)
 
     # ---- page growth / eviction -------------------------------------------
 
     def ensure_page(self, req: Request) -> bool:
-        """Make sure the page for the next write position exists.  May evict
-        a strictly *younger* running request (FCFS priority — the oldest
+        """Make sure the page for the next write position exists and is
+        exclusively owned (copy-on-write otherwise).  Allocation reclaims
+        unreferenced prefix-cached pages before falling back to evicting a
+        strictly *younger* running request (FCFS priority — the oldest
         sequence always makes progress, so the system can never livelock).
         False → no page and no younger victim: ``req`` keeps its pages but
         stalls this step (it retries once something older frees pages)."""
         while req.n_cached >= len(req.pages) * self.kv.page_size:
-            grown = self.kv.alloc.alloc(1)
-            if grown is not None:
-                req.pages.extend(grown)
-                self.kv.set_pages(req.slot, req.pages)
-                continue
+            grown = self._alloc_or_evict(req, 1)
+            if grown is None:
+                return False
+            req.pages.extend(grown)
+            self.kv.set_pages(req.slot, req.pages)
+        # copy-on-write: never write into a page another sequence (or the
+        # prefix index via a peer) still references
+        idx = req.n_cached // self.kv.page_size
+        page = req.pages[idx]
+        if self.kv.alloc.refcount(page) > 1:
+            fresh = self._alloc_or_evict(req, 1)
+            if fresh is None:
+                return False
+            self.kv.copy_page(page, fresh[0])
+            req.pages[idx] = fresh[0]
+            self.kv.alloc.free([page])
+            self.kv.set_pages(req.slot, req.pages)
+            self.n_cow_copies += 1
+        return True
+
+    def _alloc_or_evict(self, req: Request, n: int) -> Optional[List[int]]:
+        """alloc() (which itself reclaims unreferenced cached pages before
+        touching anyone's working set), then preempt younger requests."""
+        while True:
+            got = self.kv.alloc.alloc(n)
+            if got is not None:
+                return got
             victim = self._pick_victim(req)
             if victim is not None:
                 self.evict(victim)
@@ -139,8 +225,7 @@ class Scheduler:
                     f"page pool exhausted by request {req.rid} alone "
                     f"({len(req.pages)} pages); increase n_pages or use "
                     f"reserve='conservative'")
-            return False
-        return True
+            return None
 
     def _pick_victim(self, requesting: Request) -> Optional[Request]:
         """Youngest running request strictly younger than ``requesting``."""
@@ -153,13 +238,16 @@ class Scheduler:
         return max(cands, key=lambda r: (r.t_arrive, r.rid))
 
     def evict(self, req: Request) -> None:
-        """Free a running request's pages and requeue it at the front;
-        generation restarts from the prompt on re-admission (recompute)."""
+        """Free a running request's pages and requeue it at the front.
+        Generated tokens are KEPT: on re-admission the engine re-prefills
+        ``prompt + out[:-1]`` and decode resumes where it left off, so
+        eviction never regenerates tokens (identical output even under
+        non-greedy decoding) — only the KV recompute is paid."""
         self.kv.reset_slot(req.slot)
         self.slots[req.slot] = None
         self.kv.alloc.free(req.pages)
         req.pages, req.slot = [], None
-        req.out, req.n_cached = [], 0
+        req.n_cached = 0
         req.state = QUEUED
         req.n_evictions += 1
         self.n_evictions += 1

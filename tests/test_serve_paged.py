@@ -136,15 +136,47 @@ def test_eviction_under_page_pressure(qwen):
         ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
                                   max_new=10))[0]
         assert res[rid].tolist() == ref.tolist()
+    # eviction preserves generated tokens (re-prefilled, not regenerated):
+    # every output token was decoded exactly once despite the eviction
+    assert st["decode_tokens"] == sum(len(res[r]) - 1 for r in rids)
 
 
-def test_prefill_bucket_overflow_lands_in_scratch(qwen):
-    """Prompt whose padded prefill bucket exceeds the per-sequence page
+def test_eviction_keeps_tokens_and_ttft(qwen):
+    """Drive the engine step-by-step across an eviction: the victim's
+    already-generated tokens survive (re-prefilled via prompt+out), and
+    its t_first is not overwritten by the re-prefill (honest TTFT)."""
+    cfg, params = qwen
+    prompts = _prompts(cfg, (5, 3), seed=1)
+    eng = Engine(params, cfg, n_slots=2, page_size=4, n_pages=7,
+                 reserve="optimistic")
+    rids = [eng.submit(p, max_new=10) for p in prompts]
+    evicted = None
+    while evicted is None and eng.busy:
+        eng.step()
+        for r in eng.requests.values():
+            if r.n_evictions > 0:
+                evicted = r
+    assert evicted is not None
+    kept_out = list(evicted.out)
+    kept_t_first = evicted.t_first
+    assert kept_out, "victim had generated tokens before eviction"
+    assert kept_t_first is not None
+    eng.run()
+    assert evicted.out[:len(kept_out)] == kept_out   # tokens survived
+    assert evicted.t_first == kept_t_first           # TTFT not rewritten
+    ref = np.asarray(generate(
+        params, cfg, jnp.asarray(prompts[rids.index(evicted.rid)])[None],
+        max_new=10))[0]
+    assert evicted.out == ref.tolist()
+
+
+def test_prefill_chunk_overflow_lands_in_scratch(qwen):
+    """Prompt whose padded prefill chunk exceeds the per-sequence page
     table: the overflow writes must hit the scratch page, not wrap onto
     the last real page (which holds live prompt K/V)."""
     cfg, params = qwen
     eng = Engine(params, cfg, n_slots=1, page_size=4, n_pages=64,
-                 max_seq_pages=5)               # 20-token cap; bucket(18)=32
+                 max_seq_pages=5, prefill_chunk=32)   # 20-token cap < chunk
     p = _prompts(cfg, (18,), seed=6)[0]
     rid = eng.submit(p, max_new=2)
     res = eng.run()
@@ -219,3 +251,68 @@ def test_serve_engine_baseline_still_works(qwen):
     outs = ServeEngine(params, cfg, batch_slots=2).run(reqs, max_new=4)
     assert len(outs) == 3
     assert all(o.shape == (4,) for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# ragged left-padded batching + decode-step economy
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_ragged_matches_per_request_generate(qwen):
+    """Unequal-length prompts in ONE left-padded batch must decode exactly
+    what each prompt decodes alone: pad keys are masked out of attention
+    and positions are offset per row."""
+    cfg, params = qwen
+    reqs = _prompts(cfg, (4, 11, 7), seed=9)
+    outs = ServeEngine(params, cfg, batch_slots=3).run(reqs, max_new=6)
+    for o, p in zip(outs, reqs):
+        ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                                  max_new=6))[0]
+        assert o.tolist() == ref.tolist(), (o.tolist(), ref.tolist())
+
+
+def test_generate_pad_lens_matches_per_request(qwen):
+    cfg, params = qwen
+    pa, pb = _prompts(cfg, (5, 9), seed=10)
+    S = 9
+    batch = np.zeros((2, S), np.int32)
+    batch[0, S - 5:] = pa
+    batch[1] = pb
+    out = np.asarray(generate(params, cfg, jnp.asarray(batch), max_new=5,
+                              pad_lens=np.array([4, 0])))
+    for row, p in zip(out, (pa, pb)):
+        ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                                  max_new=5))[0]
+        assert row.tolist() == ref.tolist()
+
+
+def test_generate_pad_lens_rejected_for_stateful_archs():
+    cfg = get_config("hymba-1.5b").reduced()    # meta tokens + ssm state
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    prompts = jnp.zeros((2, 6), jnp.int32)
+    with pytest.raises(ValueError, match="pad_lens"):
+        generate(params, cfg, prompts, max_new=2, pad_lens=np.array([2, 0]))
+
+
+def test_generate_runs_no_wasted_decode_step(qwen, monkeypatch):
+    """A max_new rollout costs exactly max_new - 1 decode steps: the old
+    loop ran one extra step whose logits were discarded."""
+    import repro.serve.engine as eng_mod
+    cfg, params = qwen
+    calls = {"n": 0}
+    orig = eng_mod.make_decode_step
+
+    def counting(cfg):
+        inner = orig(cfg)
+
+        def step(params, cache, tokens):
+            calls["n"] += 1
+            return inner(params, cache, tokens)
+        return step
+
+    monkeypatch.setattr(eng_mod, "make_decode_step", counting)
+    monkeypatch.setattr(eng_mod.jax, "jit",
+                        lambda f, **kw: f)      # eager → count real calls
+    p = _prompts(cfg, (6,), seed=11)[0]
+    out = generate(params, cfg, jnp.asarray(p)[None], max_new=4)
+    assert out.shape == (1, 4)
+    assert calls["n"] == 3
