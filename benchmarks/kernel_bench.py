@@ -54,7 +54,53 @@ def run():
         res[f"decode_m{mb}_bm128_us"] = time_call(f_128, xs, n=3)
         res[f"decode_m{mb}_row_util_adaptive"] = mb / _pick_bm(mb)
         res[f"decode_m{mb}_row_util_bm128"] = mb / 128
+    res.update(_paged_attn_bench(rng))
     return res
+
+
+def _paged_attn_bench(rng):
+    """Fused paged-attention decode op (DESIGN.md §8) vs the gathered-view
+    reference at one table width: the gather path's cost is pinned to the
+    table width while the fused path follows ``lens`` (block skipping).
+    The interpret-mode Pallas number is the simulation cost on CPU (the
+    kernel targets Mosaic), recorded like the encoded interpret numbers —
+    the ``blocked`` XLA lowering is what serves off-TPU."""
+    from repro.kernels.paged_attention import paged_attn
+    from repro.nn.paged import gather_kv, paged_attn_decode
+
+    B, Hq, Hkv, D, ps, P = 4, 4, 2, 32, 16, 64       # 1024-token table
+    pool_k = jnp.asarray(rng.normal(size=(P + 1, ps, Hkv, D)), jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(P + 1, ps, Hkv, D)), jnp.float32)
+    pages = jnp.broadcast_to(jnp.arange(1, P + 1, dtype=jnp.int32)[None],
+                             (B, P))
+    kv_map = np.minimum(np.arange(Hq) // (Hq // Hkv), Hkv - 1)
+    q = jnp.asarray(rng.normal(size=(B, 1, Hq, D)), jnp.float32)
+    scale = 1.0 / np.sqrt(D)
+
+    def gather_ref(q, lens):
+        ck, cv = gather_kv(pool_k, pages), gather_kv(pool_v, pages)
+        k_pos = jnp.arange(ck.shape[1])
+        return paged_attn_decode(q, ck, cv, kv_map, scale=scale,
+                                 q_pos=lens[:, None], k_pos=k_pos,
+                                 k_valid=k_pos[None] < (lens + 1)[:, None])
+
+    f_gather = jax.jit(gather_ref)
+    f_blk = jax.jit(lambda q, lens: paged_attn(
+        q, pool_k, pool_v, pages, lens, scale=scale, kv_of_q=kv_map,
+        backend="blocked"))
+    f_int = jax.jit(lambda q, lens: paged_attn(
+        q, pool_k, pool_v, pages, lens, scale=scale, kv_of_q=kv_map,
+        backend="pallas_interpret"))
+    out = {"paged_attn_table_tokens": P * ps}
+    for name, ln in (("short", 40), ("long", 512)):
+        lens = jnp.full((B,), ln, jnp.int32)
+        out[f"paged_attn_{name}_gather_us"] = time_call(f_gather, q, lens,
+                                                        n=10)
+        out[f"paged_attn_{name}_blocked_us"] = time_call(f_blk, q, lens,
+                                                         n=10)
+        out[f"paged_attn_{name}_interpret_us"] = time_call(f_int, q, lens,
+                                                           n=3)
+    return out
 
 
 def csv_lines(res):
@@ -65,4 +111,11 @@ def csv_lines(res):
         f"kernel_decode_m4_adaptive,{res['decode_m4_adaptive_us']:.1f},"
         f"bm={res['decode_m4_bm_bucket']}",
         f"kernel_decode_m4_bm128,{res['decode_m4_bm128_us']:.1f},bm=128",
+        f"kernel_paged_attn_long_gather,"
+        f"{res['paged_attn_long_gather_us']:.1f},"
+        f"table={res['paged_attn_table_tokens']}",
+        f"kernel_paged_attn_long_blocked,"
+        f"{res['paged_attn_long_blocked_us']:.1f},lens=512",
+        f"kernel_paged_attn_short_blocked,"
+        f"{res['paged_attn_short_blocked_us']:.1f},lens=40",
     ]

@@ -283,6 +283,124 @@ def csv_lines_prefix(res):
 
 
 # ---------------------------------------------------------------------------
+# paged-attention decode: fused page-walk kernel vs the gathered-view path
+# ---------------------------------------------------------------------------
+
+def run_paged_attn(smoke: bool = False):
+    """Per-decode-step latency and tokens/s of the fused paged-attention
+    path (``attention_backend='pallas'`` — the Pallas kernel on TPU, its
+    blocked XLA lowering elsewhere; DESIGN.md §8) vs the gathered-view
+    reference at one table width, for long-context rows (≥ 512 cached
+    tokens) and short rows (block skipping: work follows ``lens``, not
+    the table width).  Also replays a small real trace through the engine
+    with both backends and checks greedy token identity."""
+    import jax
+    import jax.numpy as jnp
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models import init_model, init_paged_cache
+    from repro.serve.engine import make_paged_decode_step
+
+    page_size = 16
+    table_pages = 64 if smoke else 128       # 1024 / 2048-token table width
+    n_slots = 4
+    long_lens = 512                          # acceptance floor: ≥512 cached
+    short_lens = 40
+    n_iters = 10 if smoke else 30
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    layers = init_paged_cache(cfg, table_pages + 1, page_size)["layers"]
+    key = jax.random.PRNGKey(1)
+    layers = jax.tree_util.tree_map(
+        lambda a: jax.random.normal(key, a.shape, a.dtype) * 0.1, layers)
+    # every slot reads the same page chain — latency only depends on the
+    # table geometry and lens, and the pool stays tiny
+    pages = jnp.broadcast_to(
+        jnp.arange(1, table_pages + 1, dtype=jnp.int32)[None],
+        (n_slots, table_pages))
+    toks = jnp.ones((n_slots, 1), jnp.int32)
+    steps = {b: jax.jit(make_paged_decode_step(
+        dataclasses.replace(cfg, attention_backend=b)))
+        for b in ("xla", "pallas")}
+
+    def step_ms(backend, ln):
+        step = steps[backend]
+        lens = jnp.full((n_slots,), ln, jnp.int32)
+        for _ in range(3):
+            out = step(params, layers, toks, pages, lens)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            out = step(params, layers, toks, pages, lens)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / n_iters * 1e3
+
+    rows = {}
+    for name, ln in (("long", long_lens), ("short", short_lens)):
+        xla_ms = step_ms("xla", ln)
+        pal_ms = step_ms("pallas", ln)
+        rows[name] = {
+            "cached_tokens": ln,
+            "xla_step_ms": xla_ms,
+            "pallas_step_ms": pal_ms,
+            "xla_tokens_per_s": n_slots / (xla_ms / 1e3),
+            "pallas_tokens_per_s": n_slots / (pal_ms / 1e3),
+            "pallas_speedup": xla_ms / pal_ms,
+        }
+
+    # greedy token identity through the real engine on a small trace
+    rng = np.random.default_rng(SEED)
+    trace = _trace(cfg, rng)[: 4 if smoke else N_REQ]
+    n_pages = N_SLOTS * (MAX_PROMPT + 16 + 8) // PAGE_SIZE + 1
+
+    def replay(backend):
+        c = dataclasses.replace(cfg, attention_backend=backend)
+        eng, rids, _ = _run_continuous(params, c, trace, n_pages,
+                                       timed=False)
+        res = eng.results()
+        return [res[r].tolist() for r in rids]
+
+    identical = replay("pallas") == replay("xla")
+
+    resolved = "pallas" if jax.default_backend() == "tpu" else "blocked"
+    return {
+        "setup": {"table_tokens": table_pages * page_size,
+                  "page_size": page_size, "n_slots": n_slots,
+                  "timing_iters": n_iters, "smoke": smoke,
+                  "jax_backend": jax.default_backend(),
+                  # 'pallas' = Mosaic kernel on TPU; elsewhere the blocked
+                  # XLA lowering of the same page-walk algorithm runs
+                  "pallas_resolves_to": resolved},
+        "long": rows["long"],
+        "short": rows["short"],
+        # block-skip visibility: the fused path gets faster as lens
+        # shrinks while the gather path stays pinned to the table width
+        "pallas_short_vs_long_step": (rows["short"]["pallas_step_ms"]
+                                      / rows["long"]["pallas_step_ms"]),
+        "xla_short_vs_long_step": (rows["short"]["xla_step_ms"]
+                                   / rows["long"]["xla_step_ms"]),
+        "token_identical_pallas_vs_xla": bool(identical),
+    }
+
+
+def csv_lines_paged_attn(res):
+    lo, sh = res["long"], res["short"]
+    return [
+        f"paged_attn_long_xla_step_ms,0,{lo['xla_step_ms']:.3f}",
+        f"paged_attn_long_pallas_step_ms,0,{lo['pallas_step_ms']:.3f}",
+        f"paged_attn_long_speedup,0,{lo['pallas_speedup']:.3f}",
+        f"paged_attn_short_xla_step_ms,0,{sh['xla_step_ms']:.3f}",
+        f"paged_attn_short_pallas_step_ms,0,{sh['pallas_step_ms']:.3f}",
+        f"paged_attn_short_speedup,0,{sh['pallas_speedup']:.3f}",
+        f"paged_attn_block_skip_ratio,0,"
+        f"{res['pallas_short_vs_long_step']:.3f}",
+        f"paged_attn_token_identical,0,"
+        f"{int(res['token_identical_pallas_vs_xla'])}",
+    ]
+
+
+# ---------------------------------------------------------------------------
 # accuracy-vs-throughput: dense fp vs calibrated encoded-MAC serving
 # ---------------------------------------------------------------------------
 
@@ -396,11 +514,13 @@ def main():
                     help="fp = continuous-vs-static baseline bench; "
                          "encoded = dense-vs-encoded accuracy/throughput")
     ap.add_argument("--trace", default="mixed",
-                    choices=["mixed", "shared-prefix"],
+                    choices=["mixed", "shared-prefix", "paged-attn"],
                     help="mixed = the continuous-vs-static trace; "
-                         "shared-prefix = prefix-cache warm-vs-cold trace")
+                         "shared-prefix = prefix-cache warm-vs-cold trace; "
+                         "paged-attn = fused decode kernel vs gathered-"
+                         "view path (per-step latency + tokens/s)")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny shared-prefix trace (CI smoke job)")
+                    help="tiny trace variants (CI smoke jobs)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--m-bits", type=int, default=48)
     ap.add_argument("--calib-samples", type=int, default=128)
@@ -411,7 +531,13 @@ def main():
         from .common import cached          # python -m benchmarks.serving_bench
     except ImportError:
         from common import cached           # python benchmarks/serving_bench.py
-    if args.trace == "shared-prefix":
+    if args.trace == "paged-attn":
+        # one canonical artifact name: the CI smoke job and the full run
+        # write the same file (the 'setup' block records which ran)
+        res = cached("BENCH_paged_attn", lambda: run_paged_attn(args.smoke),
+                     force=args.force)
+        lines = csv_lines_paged_attn(res)
+    elif args.trace == "shared-prefix":
         # key carries smoke-ness AND the chunk size so flag changes never
         # report another configuration's stale numbers
         name = (f"serving_bench_prefix{'_smoke' if args.smoke else ''}"

@@ -102,6 +102,11 @@ class ModelConfig:
     compute_dtype: str = "float32"
     attn_chunk: int = 1024
     flash_attention: bool = False  # Pallas flash kernel (TPU; interpret on CPU)
+    # paged decode attention (DESIGN.md §8): 'xla' = gathered-view
+    # reference; 'pallas' = fused flash-decoding kernel over the page
+    # table (Mosaic on TPU, the blocked XLA lowering elsewhere);
+    # 'pallas_interpret' / 'blocked' force those lowerings (tests)
+    attention_backend: str = "xla"
     remat: bool = True
     pad_heads_to: int = 1
     vocab_pad_to: int = 1

@@ -1,0 +1,300 @@
+"""Pallas fused paged-attention decode kernel (flash-decoding over the page
+table) — DESIGN.md §8.
+
+The serving hot path after the encoded-MAC fold is decode attention: the
+reference path gathers the full page view ``pool[pages]`` into a dense
+``(B, max_seq_pages·page_size, H, D)`` tensor and computes logits over the
+whole table width every step, regardless of the actual ``lens`` — exactly
+the memory-traffic ceiling TMA/Digital-Neuron identify once multiplication
+is cheap.  This kernel instead walks each sequence's page chain directly:
+
+  * grid ``(B, max_seq_pages)`` with the page axis innermost; the softmax
+    statistics ``(m, l, acc)`` live in VMEM scratch and are revisited
+    across page blocks (same pattern as the flash and encoded kernels);
+  * the page table and ``lens`` are scalar-prefetched, so the K/V block
+    index maps resolve ``pages[b, p]`` *before* the body runs — K/V pages
+    stream HBM→VMEM one page at a time and the dense gathered view is
+    never materialized;
+  * per-row early exit: blocks past ``lens[b] // page_size`` clamp their
+    index map to the last needed page (no new DMA is issued for a
+    repeated block) and skip compute via ``pl.when`` — a slot at 40
+    cached tokens touches 3 pages of a 1024-token-wide table, not 64;
+  * grouped GQA layout and f32 accumulation mirror the dense ``mha`` op
+    order (q scaled in storage dtype, logits/softcap/mask/softmax in f32)
+    so greedy decode stays token-identical to the gather path.
+
+Backends (``paged_attn(..., backend=...)``):
+
+  * ``pallas``           — the Pallas kernel (Mosaic on TPU, interpret
+                           elsewhere; interpret is a correctness path, not
+                           a fast one — parity tests use it);
+  * ``pallas_interpret`` — force interpret mode (debug/tests);
+  * ``blocked``          — the kernel's XLA reference lowering: the same
+                           page-block online-softmax recurrence as a
+                           ``fori_loop`` bounded by ``max(lens)``, so
+                           non-TPU backends keep the algorithmic win
+                           (work scales with cached tokens, not table
+                           width) without Mosaic;
+  * ``auto``             — ``pallas`` on TPU, ``blocked`` elsewhere.
+
+Under an active mesh (parallel.sharding.set_mesh) the op runs shard-local
+over the model axis via shard_map — q sharded on q-heads, pools on
+kv-heads (mirroring parallel.statesharding's pool rule and
+``ops.encoded_matmul``'s role dispatch); attention is independent per kv
+head, so no collectives are needed and the output leaves head-sharded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import AXIS_MODEL, get_mesh, shard_map_norep
+
+NEG_INF = -2.0e38                    # finite f32 sentinel (matches mha)
+_NO_WINDOW = np.int32(2 ** 30)       # "no sliding window" resolves to huge
+
+
+def gqa_group(kv_of_q, n_q: int, n_kv: int) -> Optional[int]:
+    """Group size G when ``kv_of_q`` is the identity (MHA) or the uniform
+    grouped map (GQA/MQA) — the layouts the fused kernel handles; ``None``
+    for irregular maps (callers fall back to the gather path)."""
+    kv_np = np.asarray(kv_of_q)
+    if n_kv == n_q and np.array_equal(kv_np, np.arange(n_q)):
+        return 1
+    group = n_q // n_kv if n_kv and n_q % n_kv == 0 else 0
+    if group > 1 and np.array_equal(
+            kv_np, np.minimum(np.arange(n_q) // group, n_kv - 1)):
+        return group
+    return None
+
+
+def _softcap(s, cap):
+    return s if cap is None else cap * jnp.tanh(s / cap)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, ps, n_pb, scale, cap, G):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ln = lens_s[b]                   # tokens already cached for this row
+    nb = ln // ps + 1                # page blocks holding positions <= ln
+
+    @pl.when(p < nb)
+    def _block():
+        q = q_ref[0, 0]                              # (Hq, D)
+        k = k_ref[0]                                 # (ps, Hkv, D)
+        v = v_ref[0]
+        hkv = k.shape[1]
+        f32 = jnp.float32
+        # dense-op-order numerics: scale in storage dtype, contract in f32
+        qg = (q * jnp.asarray(scale, q.dtype)
+              ).reshape(hkv, G, q.shape[-1]).astype(f32)
+        kt = k.astype(f32).transpose(1, 0, 2)        # (Hkv, ps, D)
+        s = jax.lax.dot_general(qg, kt, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=f32)  # (Hkv, G, ps)
+        s = _softcap(s, cap)
+        t = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        d = ln - t                                   # q_pos(=ln) - k_pos
+        ok = (d >= 0) & (d < win_s[0])
+        s = jnp.where(ok[None], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1))
+        alpha = jnp.exp(m_prev - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l_ref[...] = l_ref[...] * alpha + pexp.sum(-1)
+        vt = v.astype(f32).transpose(1, 0, 2)        # (Hkv, ps, D)
+        pv = jax.lax.dot_general(pexp, vt, (((2,), (1,)), ((0,), (0,))),
+                                 preferred_element_type=f32)  # (Hkv, G, D)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pb - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0, 0] = out.reshape(-1, out.shape[-1]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "cap", "G",
+                                             "interpret"))
+def paged_attn_pallas(q, pool_k, pool_v, pages, lens, window, *,
+                      scale: float, cap=None, G: int = 1,
+                      interpret: bool = False):
+    """q (B, 1, Hq, D); pool_k/v (n_pages, ps, Hkv, D); pages (B, P) int32;
+    lens (B,) int32; window () int32 (``_NO_WINDOW`` ⇒ global)."""
+    B, _, Hq, D = q.shape
+    ps, Hkv = pool_k.shape[1], pool_k.shape[2]
+    n_pb = pages.shape[1]
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+
+    def page_idx(b, p, pages_s, lens_s, win_s):
+        # clamp past-lens blocks to the last needed page: the index map
+        # repeats, so no new DMA is issued for skipped blocks
+        p_eff = jnp.minimum(p, lens_s[b] // ps)
+        return (pages_s[b, p_eff], 0, 0, 0)
+
+    kern = functools.partial(_decode_kernel, ps=ps, n_pb=n_pb, scale=scale,
+                             cap=cap, G=G)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, n_pb),
+        in_specs=[
+            pl.BlockSpec((1, 1, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
+            pl.BlockSpec((1, ps, Hkv, D), page_idx),
+            pl.BlockSpec((1, ps, Hkv, D), page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Hkv, G), jnp.float32),
+            pltpu.VMEM((Hkv, G), jnp.float32),
+            pltpu.VMEM((Hkv, G, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(pages, lens, win, q, pool_k, pool_v)
+
+
+# ---------------------------------------------------------------------------
+# XLA reference lowering (same recurrence, fori_loop over page blocks)
+# ---------------------------------------------------------------------------
+
+def _paged_attn_blocked(q, pool_k, pool_v, pages, lens, window, *,
+                        scale: float, cap=None, G: int = 1, bk: int = 128):
+    """The kernel's algorithm in plain XLA: a ``fori_loop`` over K blocks
+    of ``max(1, bk // page_size)`` pages (~``bk`` tokens, the flash
+    kernel's K-block width — single-page steps drown in loop overhead on
+    CPU), bounded by ``max(lens)`` — the batch-wide early exit (the
+    Pallas path additionally skips per row).  Rows whose blocks are fully
+    masked contribute exp(NEG_INF − m) == 0, so short rows match the
+    per-row skip exactly."""
+    B, _, Hq, D = q.shape
+    ps, Hkv = pool_k.shape[1], pool_k.shape[2]
+    f32 = jnp.float32
+    qg = (q[:, 0] * jnp.asarray(scale, q.dtype)
+          ).reshape(B, Hkv, G, D).astype(f32)
+    win = jnp.asarray(window, jnp.int32)
+    bp = max(1, bk // ps)                            # pages per K block
+    blk = bp * ps                                    # tokens per K block
+    P = pages.shape[1]
+    if P % bp:                                       # pad table → scratch
+        pages = jnp.pad(pages, ((0, 0), (0, bp - P % bp)))
+    nb = jnp.max(lens) // blk + 1
+    t0 = jnp.arange(blk)
+
+    def body(j, carry):
+        m, l, acc = carry
+        pid = jax.lax.dynamic_slice_in_dim(pages, j * bp, bp, 1)  # (B, bp)
+        kb = jnp.take(pool_k, pid, axis=0).astype(f32)
+        vb = jnp.take(pool_v, pid, axis=0).astype(f32)
+        kb = kb.reshape(B, blk, Hkv, D)              # (B, bp, ps, H, D) →
+        vb = vb.reshape(B, blk, Hkv, D)
+        s = jnp.einsum("bhgd,bphd->bhgp", qg, kb,
+                       preferred_element_type=f32)
+        s = _softcap(s, cap)
+        d = lens[:, None] - (j * blk + t0)[None, :]  # q_pos(=lens) - k_pos
+        ok = (d >= 0) & (d < win)
+        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(s - m_new[..., None])
+        l = l * alpha + pexp.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgp,bphd->bhgd", pexp, vb, preferred_element_type=f32)
+        return m_new, l, acc
+
+    init = (jnp.full((B, Hkv, G), NEG_INF, f32),
+            jnp.zeros((B, Hkv, G), f32),
+            jnp.zeros((B, Hkv, G, D), f32))
+    m, l, acc = jax.lax.fori_loop(0, nb, body, init)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# public entry: backend + shard-local dispatch
+# ---------------------------------------------------------------------------
+
+def _local(q, pool_k, pool_v, pages, lens, win, *, scale, cap, G, backend):
+    if backend == "blocked":
+        return _paged_attn_blocked(q, pool_k, pool_v, pages, lens, win,
+                                   scale=scale, cap=cap, G=G)
+    interpret = (backend == "pallas_interpret"
+                 or jax.default_backend() != "tpu")
+    return paged_attn_pallas(q, pool_k, pool_v, pages, lens, win,
+                             scale=scale, cap=cap, G=G, interpret=interpret)
+
+
+def paged_attn(q, pool_k, pool_v, pages, lens, *, scale: float,
+               window=None, cap=None, kv_of_q=None,
+               backend: str = "auto") -> jnp.ndarray:
+    """Fused paged-attention decode step.
+
+    q (B, 1, Hq, D) · pool_k/v (n_pages, ps, Hkv, D) · pages (B, P) ·
+    lens (B,) → (B, 1, Hq, D) in q.dtype.  ``kv_of_q`` must be the
+    identity or uniform grouped map (see ``gqa_group``); callers with
+    irregular maps use the gather path.  ``window`` is None, an int, or a
+    traced scalar (negative never reaches here — blocks resolve −1 to a
+    huge window).
+
+    With an active mesh whose kv-head count divides the model axis, the
+    chosen backend runs shard-local per kv-head shard (q/pools/output
+    head-sharded, page table and lens replicated) — attention never mixes
+    kv heads, so the fused path composes with ``--mesh`` serving without
+    collectives.
+    """
+    B, S, Hq, D = q.shape
+    if S != 1:
+        raise ValueError(f"paged_attn is a decode kernel (Sq == 1), got "
+                         f"Sq={S}; prefill chunks use the gather path")
+    Hkv = pool_k.shape[2]
+    G = Hq // Hkv if kv_of_q is None else gqa_group(kv_of_q, Hq, Hkv)
+    if G is None:
+        raise ValueError("paged_attn needs an identity or uniform grouped "
+                         "kv_of_q map; fall back to the gather path")
+    if backend not in ("auto", "pallas", "pallas_interpret", "blocked"):
+        raise ValueError(f"unknown paged-attention backend {backend!r}; "
+                         "expected auto | pallas | pallas_interpret | "
+                         "blocked (or attention_backend 'xla' for the "
+                         "gather path)")
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "blocked"
+    win = _NO_WINDOW if window is None else window
+    win = jnp.asarray(win, jnp.int32)
+    kw = dict(scale=scale, cap=cap, G=G, backend=backend)
+
+    mesh = get_mesh()
+    if mesh is not None and AXIS_MODEL in mesh.axis_names:
+        tp = mesh.shape[AXIS_MODEL]
+        if tp > 1 and Hkv % tp == 0:
+            ax = AXIS_MODEL
+
+            def shard(ql, kl, vl, pg, ln, w):
+                return _local(ql, kl, vl, pg, ln, w, **kw)
+
+            return shard_map_norep(
+                shard, mesh,
+                (P(None, None, ax, None), P(None, None, ax, None),
+                 P(None, None, ax, None), P(None, None), P(None), P()),
+                P(None, None, ax, None))(q, pool_k, pool_v, pages, lens, win)
+    return _local(q, pool_k, pool_v, pages, lens, win, **kw)

@@ -72,6 +72,14 @@ def main():
                     help="prefill chunk size: prompts are prefilled in "
                          "fixed chunks interleaved with decode steps, so "
                          "long prompts never stall running slots")
+    ap.add_argument("--paged-attn", default="xla",
+                    choices=["xla", "pallas"],
+                    help="paged decode attention (DESIGN.md §8): 'xla' = "
+                         "gathered-page-view reference; 'pallas' = fused "
+                         "flash-decoding kernel reading K/V page-by-page "
+                         "through the page table with per-row lens "
+                         "early-exit (Mosaic on TPU, the blocked XLA "
+                         "lowering of the same algorithm elsewhere)")
     # encoded-serving knobs (ignored unless --mac encoded)
     ap.add_argument("--encoding", default="search",
                     choices=["search", "exact"],
@@ -124,6 +132,8 @@ def main():
         cfg = cfg.reduced()
     if args.mac == "int8":
         cfg = dataclasses.replace(cfg, mac=MacConfig(mode="int8"))
+    if args.paged_attn != "xla":
+        cfg = dataclasses.replace(cfg, attention_backend=args.paged_attn)
     params = init_model(jax.random.PRNGKey(0), cfg)
 
     if args.mac == "encoded":
@@ -162,7 +172,8 @@ def main():
         st = engine.stats()
         total = st["decode_tokens"]
         print(f"served {len(reqs)} requests, {total} tokens in {dt:.2f}s "
-              f"({total / dt:.1f} tok/s, mac={args.mac}, continuous)")
+              f"({total / dt:.1f} tok/s, mac={args.mac}, "
+              f"paged-attn={args.paged_attn}, continuous)")
         print(f"  occupancy={st['occupancy']:.2f} "
               f"evictions={st['evictions']} "
               f"p50={st['latency_p50_s']:.3f}s p99={st['latency_p99_s']:.3f}s "

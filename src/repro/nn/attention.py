@@ -30,6 +30,7 @@ from .common import linear, linear_init, apply_rope, softcap, norm_init, \
     norm_apply
 from .attention_mha import mha, NEG_INF, _mask  # grouped-layout core op
 from .paged import scatter_kv, gather_kv, paged_attn_decode
+from repro.kernels.paged_attention import paged_attn, gqa_group
 
 
 def kv_of_q_map(n_heads: int, n_kv: int, n_heads_p: int, n_kv_p: int
@@ -123,22 +124,36 @@ def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
         out = parallel_attn(q, k, v)
     elif "pool_k" in cache:
         # paged serving path (repro.serve): write-through into the shared
-        # page pool, then attend over the gathered page view.  ``positions``
+        # page pool, then attend through the page table.  ``positions``
         # is (B, S) here (per-slot ragged lens from the scheduler), so
         # decode (S == 1) and prefill chunks starting at arbitrary offsets
         # (chunked prefill, partial-prefix prefill after a prefix-cache
         # hit) share one code path: every query row sees all tokens cached
-        # for its slot plus its in-chunk causal prefix.
+        # for its slot plus its in-chunk causal prefix.  Decode steps with
+        # a regular GQA layout route through the fused flash-decoding
+        # kernel when ``cfg.attention_backend != 'xla'`` (DESIGN.md §8) —
+        # work scales with each row's cached tokens instead of the table
+        # width; everything else keeps the gathered-view reference path.
         pages, lens = cache["pages"], cache["lens"]
         pk = scatter_kv(cache["pool_k"], pages, positions, k)
         pv = scatter_kv(cache["pool_v"], pages, positions, v)
-        ck, cv = gather_kv(pk, pages), gather_kv(pv, pages)
-        k_pos = jnp.arange(ck.shape[1])
-        k_valid = k_pos[None, :] < (lens + S)[:, None]
-        out = paged_attn_decode(q, ck, cv, kv_map, scale=scale,
-                                q_pos=positions, k_pos=k_pos,
-                                k_valid=k_valid, window=window,
-                                cap=cfg.attn_softcap)
+        fused = (S == 1 and cfg.attention_backend != "xla"
+                 and gqa_group(kv_map, cfg.n_heads_p, cfg.n_kv_p)
+                 is not None)
+        if fused:
+            backend = ("auto" if cfg.attention_backend == "pallas"
+                       else cfg.attention_backend)
+            out = paged_attn(q, pk, pv, pages, lens, scale=scale,
+                             window=window, cap=cfg.attn_softcap,
+                             kv_of_q=kv_map, backend=backend)
+        else:
+            ck, cv = gather_kv(pk, pages), gather_kv(pv, pages)
+            k_pos = jnp.arange(ck.shape[1])
+            k_valid = k_pos[None, :] < (lens + S)[:, None]
+            out = paged_attn_decode(q, ck, cv, kv_map, scale=scale,
+                                    q_pos=positions, k_pos=k_pos,
+                                    k_valid=k_valid, window=window,
+                                    cap=cfg.attn_softcap)
         new_cache = {"pool_k": pk, "pool_v": pv}
     else:
         ck, cv, pos = cache["k"], cache["v"], cache["pos"]

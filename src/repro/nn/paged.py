@@ -18,6 +18,11 @@ Everything here is shape-static and jit/scan-safe; allocation policy
 op takes per-row absolute positions, so decode steps and prefill chunks
 starting at arbitrary offsets (chunked prefill, partial-prefix prefill
 after a prefix-cache hit — DESIGN.md §7) share one code path.
+
+``paged_attn_decode`` over the gathered view is the *reference* path
+(``cfg.attention_backend == 'xla'``); decode steps can instead route
+through the fused page-walk kernel in ``repro.kernels.paged_attention``
+(DESIGN.md §8), which this op also validates.
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.paged_attention import gqa_group
 from .common import softcap
 from .attention_mha import NEG_INF
 
@@ -73,15 +79,10 @@ def paged_attn_decode(q, k, v, kv_of_q: np.ndarray, *, scale: float,
     Hkv = k.shape[2]
     f32 = jnp.float32
     kv_np = np.asarray(kv_of_q)
-    identity = Hkv == Hq and np.array_equal(kv_np, np.arange(Hq))
-    group = Hq // Hkv if Hkv and Hq % Hkv == 0 else 0
-    uniform = group > 1 and np.array_equal(
-        kv_np, np.minimum(np.arange(Hq) // group, Hkv - 1))
-    if identity:
-        G, He = 1, Hq
-    elif uniform:
-        G, He = group, Hkv
-    else:
+    group = gqa_group(kv_np, Hq, Hkv)    # one classifier for both paths
+    if group is not None:
+        G, He = group, Hq // group
+    else:                                # irregular map: gather to q heads
         k = jnp.take(k, jnp.asarray(kv_np), axis=2)
         v = jnp.take(v, jnp.asarray(kv_np), axis=2)
         G, He = 1, Hq

@@ -267,9 +267,22 @@ class Engine:
 
     def submit(self, prompt, max_new: int = 32,
                eos_id: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32).ravel()
+        total = int(prompt.shape[0]) + max_new
+        if total > self.kv.max_seq_tokens:
+            # reject BEFORE registering: an admitted oversize request
+            # would outgrow its fixed (max_seq_pages,)-row page table and
+            # die mid-serve deep in PagedKVCache.set_pages — and a raise
+            # after registration would leak a dead rid into self.requests
+            raise ValueError(
+                f"request of {prompt.shape[0]} prompt + {max_new} new "
+                f"tokens exceeds the {self.kv.max_seq_tokens}-token "
+                f"per-sequence limit (max_seq_pages={self.kv.max_seq_pages}"
+                f" × page_size={self.kv.page_size}); raise max_seq_pages "
+                "or split the request")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32).ravel(),
+        req = Request(rid=rid, prompt=prompt,
                       max_new=max_new, eos_id=eos_id,
                       t_arrive=time.perf_counter())
         self.requests[rid] = req
@@ -281,10 +294,15 @@ class Engine:
         return self.sched.busy
 
     def run(self, max_steps: int = 100_000) -> dict:
-        """Drive the loop until the queue and all slots drain."""
+        """Drive the loop until the queue and all slots drain.
+
+        ``max_steps`` bounds THIS call: ``metrics['steps']`` is lifetime-
+        cumulative, so a reused warm engine (the memoized-jit warmup flow)
+        must not trip the livelock guard on its second trace."""
+        start = self.metrics["steps"]
         while self.busy:
             self.step()
-            if self.metrics["steps"] > max_steps:
+            if self.metrics["steps"] - start > max_steps:
                 raise RuntimeError("engine did not drain (livelock?)")
         return self.results()
 

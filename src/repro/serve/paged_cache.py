@@ -23,6 +23,7 @@ state the scheduler works against:
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 import math
 from collections import OrderedDict
@@ -33,6 +34,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import init_paged_cache, supports_paged_cache
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page_jit(layers, src, dst):
+    """In-place page duplication: the pool buffers are donated so XLA
+    updates one page per pool instead of materializing a full copy of
+    every pool (the eager ``a.at[...].set`` a COW event used to run
+    reallocated the ENTIRE pool per layer leaf).  ``src``/``dst`` are
+    traced scalars — one compile covers every page pair."""
+    return jax.tree_util.tree_map(
+        lambda a: a.at[:, dst].set(a[:, src]), layers)
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -285,9 +297,11 @@ class PagedKVCache:
     def copy_page(self, src: int, dst: int) -> None:
         """Copy-on-write support: duplicate one pool page on device (every
         layer stage, k and v).  Rare — only taken when a write would land
-        in a page shared with another sequence."""
-        self.layers = jax.tree_util.tree_map(
-            lambda a: a.at[:, dst].set(a[:, src]), self.layers)
+        in a page shared with another sequence.  Runs jitted with the pool
+        buffers donated, so the copy is in-place (no full-pool
+        reallocation; the COW test asserts pointer stability)."""
+        self.layers = _copy_page_jit(self.layers, jnp.int32(src),
+                                     jnp.int32(dst))
 
     def pages_dev(self) -> jnp.ndarray:
         return jnp.asarray(self.ptab)

@@ -105,7 +105,13 @@ def test_kv_copy_page_cow(qwen):
                       max_seq_pages=4)
     kv.layers = jax.tree_util.tree_map(
         lambda a: a.at[:, 1].set(3.0), kv.layers)
+    kv.copy_page(0, 3)          # warm the jitted copy (first call may alloc)
+    ptrs = [a.unsafe_buffer_pointer()
+            for st in kv.layers.values() for a in st.values()]
     kv.copy_page(1, 2)
+    # COW is in-place: donated pool buffers, no full-pool reallocation
+    assert [a.unsafe_buffer_pointer()
+            for st in kv.layers.values() for a in st.values()] == ptrs
     for st in kv.layers.values():
         for a in st.values():
             np.testing.assert_array_equal(np.asarray(a[:, 2]),

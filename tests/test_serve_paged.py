@@ -204,6 +204,48 @@ def test_retry_admission_gets_pages_before_decode(qwen):
     assert res[rb].tolist() == ref_b.tolist()
 
 
+def test_run_max_steps_counts_per_call(qwen):
+    """``run(max_steps=...)`` bounds THIS call: a reused warm engine used
+    to trip the livelock guard on its second run because the guard
+    compared lifetime-cumulative metrics['steps']."""
+    cfg, params = qwen
+    p = _prompts(cfg, (6,), seed=12)[0]
+    eng = Engine(params, cfg, n_slots=1, page_size=4, n_pages=32)
+    eng.submit(p, max_new=5)
+    eng.run(max_steps=50)
+    steps_first = eng.metrics["steps"]
+    assert steps_first > 0
+    # a second run whose budget is below the cumulative count must pass
+    assert steps_first < 50
+    eng.submit(p, max_new=5)
+    out = eng.run(max_steps=steps_first)        # would raise pre-fix
+    assert len(out) == 2
+    # a genuinely too-small budget still trips the guard
+    eng.submit(p, max_new=5)
+    with pytest.raises(RuntimeError, match="did not drain"):
+        eng.run(max_steps=1)
+
+
+def test_submit_rejects_oversized_request(qwen):
+    """plen + max_new must fit the fixed per-sequence page table: the
+    boundary request is served, one token more is rejected at submit()
+    (clear error naming the limit, nothing registered) — it used to be
+    admitted and die mid-serve in PagedKVCache.set_pages."""
+    cfg, params = qwen
+    eng = Engine(params, cfg, n_slots=1, page_size=4, n_pages=32,
+                 max_seq_pages=3)               # 12-token limit
+    assert eng.kv.max_seq_tokens == 12
+    p = _prompts(cfg, (8,), seed=13)[0]
+    with pytest.raises(ValueError, match="12-token per-sequence limit"):
+        eng.submit(p, max_new=5)                # 13 > 12
+    assert eng.requests == {} and eng._next_rid == 0   # nothing leaked
+    rid = eng.submit(p, max_new=4)              # 12 == 12: boundary serves
+    res = eng.run()
+    ref = np.asarray(generate(params, cfg, jnp.asarray(p)[None],
+                              max_new=4))[0]
+    assert res[rid].tolist() == ref.tolist()
+
+
 def test_unsupported_arch_rejected():
     cfg = get_config("hymba-1.5b").reduced()    # ssm state + meta tokens
     assert not supports_paged_cache(cfg)
