@@ -18,6 +18,15 @@ def cached(name: str, fn, force: bool = False):
     return out
 
 
+def pct(xs, q: float) -> float:
+    """Percentile with q in [0, 100] — the repo-wide implementation
+    (repro.obs.stats: linear interpolation, matches numpy.percentile).
+    Lazy import so common.py stays usable without PYTHONPATH=src as long
+    as pct() isn't called."""
+    from repro.obs import percentile
+    return percentile(xs, q)
+
+
 def time_call(fn, *args, n: int = 10, warmup: int = 2) -> float:
     """µs per call (after jit warmup, blocked on result)."""
     import jax

@@ -113,8 +113,10 @@ def _run_static(params, cfg, trace, *, timed=True):
 
 
 def _pct(xs, q):
-    xs = sorted(xs)
-    return xs[min(len(xs) - 1, int(round(q * (len(xs) - 1))))]
+    """q in [0, 1] — thin wrapper over the repo-wide percentile helper
+    (repro.obs.stats, linear interpolation, matches numpy.percentile)."""
+    from repro.obs import percentile
+    return percentile(xs, 100.0 * q)
 
 
 def run():
@@ -401,6 +403,128 @@ def csv_lines_paged_attn(res):
 
 
 # ---------------------------------------------------------------------------
+# telemetry: tracing overhead + Chrome-trace validity + span reconciliation
+# ---------------------------------------------------------------------------
+
+def run_telemetry(smoke: bool = False, trace_out=None, metrics_out=None):
+    """Replay a pressure trace through the engine with the lifecycle
+    tracer ON vs OFF (DESIGN.md §9): reports the tracing overhead
+    fraction, validates the Chrome trace-event export in-process (every
+    span well-formed; prefill/decode/evict spans present; per-request
+    ``queued``/``prefill``/``decode`` phase durations sum exactly to the
+    ``request`` span = the reported latency), and optionally writes the
+    trace + metrics-registry snapshot to disk.
+
+    The geometry (2 slots over a 7-page pool of 4-token pages, optimistic
+    reservation, 10 new tokens per request) forces recompute preemption,
+    so the trace provably contains ``evict`` instants."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_model
+    from repro.serve import Engine
+    from repro.serve.telemetry import ServeTelemetry
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    n_slots, page_size, n_pages = 2, 4, 7
+    plens = [5, 3, 6] if smoke else [5, 3, 6, 7, 4, 6, 5, 3]
+    max_new = 10
+    rng = np.random.default_rng(SEED)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in plens]
+    total_tokens = max_new * len(prompts)
+
+    def replay(tel):
+        eng = Engine(params, cfg, n_slots=n_slots, page_size=page_size,
+                     n_pages=n_pages, reserve="optimistic",
+                     prefill_chunk=4, telemetry=tel)
+        t0 = time.perf_counter()
+        rids = [eng.submit(p, max_new=max_new) for p in prompts]
+        eng.run()
+        return eng, rids, time.perf_counter() - t0
+
+    replay(None)                       # warmup (absorb jit compiles)
+    reps = 3 if smoke else 5
+    wall_off = min(replay(None)[2] for _ in range(reps))
+    tel = ServeTelemetry(trace=True)
+    eng, rids, _ = replay(tel)         # the validated + exported run
+    walls_on = [replay(ServeTelemetry(trace=True))[2] for _ in range(reps)]
+    wall_on = min(walls_on)
+
+    # greedy outputs must not depend on whether the tracer is attached
+    eng_off, rids_off, _ = replay(None)
+    res_on, res_off = eng.results(), eng_off.results()
+    identical = all(res_on[a].tolist() == res_off[b].tolist()
+                    for a, b in zip(rids, rids_off))
+
+    # ---- in-process trace validation ----
+    events = tel.tracer.chrome_events()
+    spans = [e for e in events if e.get("ph") == "X"]
+    names = {e["name"] for e in events}
+    valid = all(e["dur"] >= 0 and e["ts"] >= 0
+                and {"name", "ph", "ts", "dur", "pid", "tid"} <= set(e)
+                for e in spans)
+    need = {"step", "prefill_chunk", "decode_step", "evict", "request",
+            "queued", "prefill", "decode", "admit", "first_token"}
+    valid &= need <= names
+    # reconciliation: per request, phase spans telescope to the latency
+    phases = {}
+    for e in spans:
+        if e["name"] in ("queued", "prefill", "decode"):
+            phases.setdefault(e["tid"], 0.0)
+            phases[e["tid"]] += e["dur"]
+    max_err_us = 0.0
+    n_req_spans = 0
+    for e in spans:
+        if e["name"] == "request":
+            n_req_spans += 1
+            max_err_us = max(max_err_us,
+                             abs(phases.get(e["tid"], 0.0) - e["dur"]))
+    valid &= n_req_spans == len(prompts)
+    valid &= max_err_us <= 2.0          # µs — float rounding only
+
+    st = eng.stats()
+    if trace_out:
+        tel.tracer.write_chrome(trace_out)
+    if metrics_out:
+        tel.registry.write_json(metrics_out)
+
+    counts = {n: sum(1 for e in events if e.get("name") == n)
+              for n in sorted(names - {"process_name", "thread_name"})}
+    return {
+        "setup": {"n_requests": len(prompts), "n_slots": n_slots,
+                  "page_size": page_size, "n_pages": n_pages,
+                  "max_new": max_new, "reps": reps, "smoke": smoke},
+        "untraced": {"wall_s": wall_off,
+                     "tokens_per_s": total_tokens / wall_off},
+        "traced": {"wall_s": wall_on,
+                   "tokens_per_s": total_tokens / wall_on,
+                   "n_events": len(events)},
+        "overhead_frac": (wall_on - wall_off) / wall_off,
+        "trace_valid": bool(valid),
+        "reconcile_max_err_us": max_err_us,
+        "span_counts": counts,
+        "evictions": st["evictions"],
+        "token_identical_traced_vs_untraced": bool(identical),
+    }
+
+
+def csv_lines_telemetry(res):
+    t, u = res["traced"], res["untraced"]
+    return [
+        f"telemetry_untraced_tok_s,0,{u['tokens_per_s']:.2f}",
+        f"telemetry_traced_tok_s,0,{t['tokens_per_s']:.2f}",
+        f"telemetry_overhead_frac,0,{res['overhead_frac']:.4f}",
+        f"telemetry_trace_valid,0,{int(res['trace_valid'])}",
+        f"telemetry_reconcile_max_err_us,0,"
+        f"{res['reconcile_max_err_us']:.3f}",
+        f"telemetry_evictions,0,{res['evictions']}",
+        f"telemetry_token_identical,0,"
+        f"{int(res['token_identical_traced_vs_untraced'])}",
+    ]
+
+
+# ---------------------------------------------------------------------------
 # accuracy-vs-throughput: dense fp vs calibrated encoded-MAC serving
 # ---------------------------------------------------------------------------
 
@@ -420,19 +544,12 @@ def _engine_metrics(eng, rids, wall, total_tokens):
 
 def _logit_agreement(params_d, cfg_d, params_e, cfg_e, prompts):
     """Top-1 argmax agreement + mean |Δlogit| between the dense fp forward
-    and the encoded forward over full prompt prefills (all positions)."""
-    import jax.numpy as jnp
-    from repro.models import apply_model
-    agree, n, dsum = 0, 0, 0.0
-    for p in prompts:
-        t = jnp.asarray(p)[None]
-        ld, _, _ = apply_model(params_d, cfg_d, t)
-        le, _, _ = apply_model(params_e, cfg_e, t)
-        ld, le = np.asarray(ld[0]), np.asarray(le[0])
-        agree += int((ld.argmax(-1) == le.argmax(-1)).sum())
-        n += ld.shape[0]
-        dsum += float(np.abs(ld - le).mean())
-    return agree / max(n, 1), dsum / max(len(prompts), 1)
+    and the encoded forward over full prompt prefills (all positions) —
+    the same ``repro.obs.logit_agreement`` the engine's online
+    ``DriftMonitor`` gauge samples, so offline and online numbers agree
+    by construction."""
+    from repro.obs import logit_agreement
+    return logit_agreement(params_d, cfg_d, params_e, cfg_e, prompts)
 
 
 def run_encoded(m_bits: int = 48, n_samples: int = 128, refine: int = 64):
@@ -514,13 +631,23 @@ def main():
                     help="fp = continuous-vs-static baseline bench; "
                          "encoded = dense-vs-encoded accuracy/throughput")
     ap.add_argument("--trace", default="mixed",
-                    choices=["mixed", "shared-prefix", "paged-attn"],
+                    choices=["mixed", "shared-prefix", "paged-attn",
+                             "telemetry"],
                     help="mixed = the continuous-vs-static trace; "
                          "shared-prefix = prefix-cache warm-vs-cold trace; "
                          "paged-attn = fused decode kernel vs gathered-"
-                         "view path (per-step latency + tokens/s)")
+                         "view path (per-step latency + tokens/s); "
+                         "telemetry = tracing overhead + Chrome-trace "
+                         "validity + span/latency reconciliation")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace variants (CI smoke jobs)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="--trace telemetry: write the Chrome trace-event "
+                         "JSON here (only on a fresh run, i.e. with "
+                         "--force or a cold artifact cache)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="--trace telemetry: write the metrics-registry "
+                         "snapshot JSON here (fresh runs only, as above)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--m-bits", type=int, default=48)
     ap.add_argument("--calib-samples", type=int, default=128)
@@ -537,6 +664,14 @@ def main():
         res = cached("BENCH_paged_attn", lambda: run_paged_attn(args.smoke),
                      force=args.force)
         lines = csv_lines_paged_attn(res)
+    elif args.trace == "telemetry":
+        # one canonical artifact (the 'setup' block records smoke-ness);
+        # trace/metrics exports happen inside the fresh run
+        res = cached("BENCH_telemetry",
+                     lambda: run_telemetry(args.smoke, args.trace_out,
+                                           args.metrics_out),
+                     force=args.force)
+        lines = csv_lines_telemetry(res)
     elif args.trace == "shared-prefix":
         # key carries smoke-ness AND the chunk size so flag changes never
         # report another configuration's stale numbers

@@ -72,6 +72,28 @@ def main():
                     help="prefill chunk size: prompts are prefilled in "
                          "fixed chunks interleaved with decode steps, so "
                          "long prompts never stall running slots")
+    # observability (DESIGN.md §9) — continuous engine only
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the request-lifecycle trace here: Chrome "
+                         "trace-event JSON (open in Perfetto / "
+                         "chrome://tracing), or JSONL when PATH ends in "
+                         ".jsonl; tracing is off without this flag")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the full metrics-registry snapshot "
+                         "(counters/gauges/histograms) as JSON")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="wrap the serving run in a jax.profiler trace "
+                         "(TensorBoard/XPlane dump with per-op device "
+                         "time)")
+    ap.add_argument("--time-device", action="store_true",
+                    help="device-time attribution: block_until_ready "
+                         "around every jitted prefill/decode call so "
+                         "device step time separates from host scheduler "
+                         "time (adds a sync per step)")
+    ap.add_argument("--drift-every", type=int, default=0, metavar="N",
+                    help="with --mac encoded: sample dense-vs-encoded "
+                         "top-1 logit agreement online every N engine "
+                         "steps and publish it as a gauge (0 = off)")
     ap.add_argument("--paged-attn", default="xla",
                     choices=["xla", "pallas"],
                     help="paged decode attention (DESIGN.md §8): 'xla' = "
@@ -136,6 +158,7 @@ def main():
         cfg = dataclasses.replace(cfg, attention_backend=args.paged_attn)
     params = init_model(jax.random.PRNGKey(0), cfg)
 
+    params_ref, cfg_ref = params, cfg   # dense reference for --drift-every
     if args.mac == "encoded":
         overrides = None
         if args.encoding == "exact":
@@ -160,11 +183,21 @@ def main():
             for _ in range(args.requests)]
 
     if args.continuous:
+        from repro.obs import DriftMonitor
+        from repro.serve.telemetry import ServeTelemetry
+        drift = None
+        if args.drift_every > 0:
+            drift = DriftMonitor(params_ref, cfg_ref,
+                                 every=args.drift_every)
+        tel = ServeTelemetry(trace=bool(args.trace_out),
+                             time_device=args.time_device,
+                             drift=drift, profile_dir=args.profile_dir)
         engine = Engine(params, cfg, n_slots=args.slots,
                         page_size=args.page_size, n_pages=args.n_pages,
                         reserve=args.reserve, mesh=mesh,
                         prefix_cache=args.prefix_cache,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        telemetry=tel)
         t0 = time.time()
         rids = [engine.submit(r, max_new=args.max_new) for r in reqs]
         outs = engine.run()
@@ -184,6 +217,23 @@ def main():
                   f"tokens, {st['prefix_pages_indexed']} pages indexed, "
                   f"{st['prefill_chunks']} prefill chunks of "
                   f"{st['prefill_chunk']})")
+        if "ttft_p50_s" in st:
+            print(f"  ttft_p50={st['ttft_p50_s']:.3f}s "
+                  f"tpot_p50={st.get('tpot_p50_s', float('nan')):.4f}s "
+                  f"step_p50={st['step_ms_p50']:.2f}ms")
+        if args.time_device and "device_decode_ms_p50" in st:
+            print(f"  device: decode_p50={st['device_decode_ms_p50']:.2f}ms "
+                  f"prefill_p50={st.get('device_prefill_ms_p50', 0.0):.2f}ms")
+        if drift is not None and drift.last is not None:
+            print(f"  drift: top1_agreement={drift.last:.4f} "
+                  f"abs_logit_delta={drift.last_delta:.4f}")
+        jsonl = args.trace_out and args.trace_out.endswith(".jsonl")
+        tel.write(trace_out=None if jsonl else args.trace_out,
+                  trace_jsonl=args.trace_out if jsonl else None,
+                  metrics_out=args.metrics_out)
+        for p in (args.trace_out, args.metrics_out):
+            if p:
+                print(f"  wrote {p}")
         for i, rid in enumerate(rids[:3]):
             print(f"req{i}: {list(map(int, outs[rid][:10]))} ...")
         return

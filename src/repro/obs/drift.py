@@ -1,0 +1,103 @@
+"""Encoded-MAC drift monitor: dense-vs-encoded agreement, online.
+
+The paper's accuracy/efficiency tradeoff is measured offline by
+``benchmarks/serving_bench.py --mac encoded`` as top-1 logit agreement
+between the dense fp forward and the calibrated encoded forward.  The
+``DriftMonitor`` makes the same number continuously observable *while
+serving* (DESIGN.md §9): every N engine steps it replays a sample of the
+currently-resident prompts through both parameter sets and publishes the
+agreement as a gauge — if the encoded path drifts from dense mid-trace
+(activation distribution shift vs the calibration stream), the gauge
+shows it without stopping the engine.
+
+``logit_agreement`` is the shared measurement; the benchmark imports it
+from here, so the online gauge and the offline BENCH number are the same
+computation by construction (parity asserted in
+``tests/test_telemetry.py``).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+def logit_agreement(params_a, cfg_a, params_b, cfg_b, prompts,
+                    max_len: Optional[int] = None):
+    """Top-1 argmax agreement + mean |Δlogit| between two forwards over
+    full prompt prefills (all positions, vocab-clipped)."""
+    import jax.numpy as jnp
+    from repro.models import apply_model
+    agree, n, dsum = 0, 0, 0.0
+    for p in prompts:
+        p = np.asarray(p)[:max_len] if max_len else np.asarray(p)
+        if p.size == 0:
+            continue
+        t = jnp.asarray(p)[None]
+        la, _, _ = apply_model(params_a, cfg_a, t)
+        lb, _, _ = apply_model(params_b, cfg_b, t)
+        v = min(cfg_a.vocab_size, cfg_b.vocab_size)
+        la, lb = np.asarray(la[0, :, :v]), np.asarray(lb[0, :, :v])
+        agree += int((la.argmax(-1) == lb.argmax(-1)).sum())
+        n += la.shape[0]
+        dsum += float(np.abs(la - lb).mean())
+    if n == 0:
+        return float("nan"), float("nan")
+    return agree / n, dsum / max(len(prompts), 1)
+
+
+class DriftMonitor:
+    """Samples serving-params-vs-reference top-1 agreement every
+    ``every`` engine steps and publishes it through the registry.
+
+    ``params_ref``/``cfg_ref`` are the dense fp reference; the engine
+    passes its own (encoded) params at sample time.  Sampling runs the
+    reference forward on the host critical path, so ``every`` trades
+    observability freshness against throughput — the work is bounded by
+    ``max_prompts`` prompts of ``max_len`` tokens per sample.
+    """
+
+    def __init__(self, params_ref, cfg_ref, every: int = 64,
+                 max_prompts: int = 2, max_len: int = 32):
+        if every < 1:
+            raise ValueError("drift monitor: every must be >= 1")
+        self.params_ref, self.cfg_ref = params_ref, cfg_ref
+        self.every = every
+        self.max_prompts = max_prompts
+        self.max_len = max_len
+        self.last: Optional[float] = None
+        self.last_delta: Optional[float] = None
+        self._g_agree = self._g_delta = self._c_samples = None
+
+    def bind(self, registry) -> "DriftMonitor":
+        self._g_agree = registry.gauge(
+            "encoded_drift_top1",
+            "online dense-vs-encoded top-1 logit agreement")
+        self._g_delta = registry.gauge(
+            "encoded_drift_abs_logit", "mean |Δlogit| vs the reference")
+        self._c_samples = registry.counter(
+            "drift_samples", "drift monitor sampling events")
+        return self
+
+    def sample(self, params, cfg, prompts: List[np.ndarray]):
+        """Measure now (unconditionally) and publish; returns the
+        agreement, or None when there was nothing to sample."""
+        prompts = [p for p in prompts if np.asarray(p).size][:self.max_prompts]
+        if not prompts:
+            return None
+        agree, delta = logit_agreement(self.params_ref, self.cfg_ref,
+                                       params, cfg, prompts,
+                                       max_len=self.max_len)
+        self.last, self.last_delta = agree, delta
+        if self._g_agree is not None:
+            self._g_agree.set(agree)
+            self._g_delta.set(delta)
+            self._c_samples.inc()
+        return agree
+
+    def maybe_sample(self, step: int, params, cfg,
+                     prompts: List[np.ndarray]):
+        """Engine hook: sample only on every ``every``-th step."""
+        if step % self.every:
+            return None
+        return self.sample(params, cfg, prompts)

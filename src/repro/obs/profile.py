@@ -1,0 +1,43 @@
+"""Device-profiler hook: optional ``jax.profiler`` trace around serving.
+
+``profiler_trace(dir)`` wraps a serving run in a
+``jax.profiler.start_trace``/``stop_trace`` pair when a directory is
+given (``launch/serve.py --profile-dir``), and is a no-op otherwise.
+The resulting TensorBoard/XPlane dump attributes time *inside* the
+jitted steps (per-op device time), complementing the host-side
+``time_device`` attribution the telemetry layer records per engine step
+(DESIGN.md §9).
+
+Profiler availability varies by platform/backend, so failures to start
+degrade to a warning instead of killing the serving run.
+"""
+from __future__ import annotations
+
+import contextlib
+import warnings
+from typing import Optional
+
+
+@contextlib.contextmanager
+def profiler_trace(profile_dir: Optional[str] = None):
+    """Context manager: jax profiler trace into ``profile_dir`` (no-op
+    when None/empty).  Yields True iff the profiler actually started."""
+    if not profile_dir:
+        yield False
+        return
+    import jax
+    started = False
+    try:
+        jax.profiler.start_trace(profile_dir)
+        started = True
+    except Exception as e:                      # pragma: no cover - platform
+        warnings.warn(f"jax.profiler.start_trace failed ({e}); "
+                      "serving continues unprofiled")
+    try:
+        yield started
+    finally:
+        if started:
+            try:
+                jax.profiler.stop_trace()
+            except Exception as e:              # pragma: no cover - platform
+                warnings.warn(f"jax.profiler.stop_trace failed ({e})")

@@ -7,3 +7,4 @@ from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
 from .encoded import (prepare_encoded_serving, capture_activation_stats,
                       family_row_weights, search_family_encodings,
                       fold_linear_params)
+from .telemetry import ServeTelemetry, req_tid, TID_ENGINE, TID_DEVICE

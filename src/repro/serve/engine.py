@@ -38,11 +38,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import apply_model, init_cache, supports_paged_cache
+from repro.obs import percentile, profiler_trace
 from repro.parallel.sharding import param_specs, set_mesh
 from repro.parallel.statesharding import cache_specs
 from .paged_cache import PagedKVCache, pages_for
 from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
                         FINISHED)
+from .telemetry import ServeTelemetry, TID_DEVICE, TID_ENGINE, req_tid
 
 
 def _shard_params(params, mesh):
@@ -227,7 +229,8 @@ class Engine:
                  page_size: int = 16, n_pages: int = 128,
                  max_seq_pages: Optional[int] = None,
                  reserve: str = "conservative", mesh=None,
-                 prefill_chunk: int = 32, prefix_cache: bool = False):
+                 prefill_chunk: int = 32, prefix_cache: bool = False,
+                 telemetry: Optional[ServeTelemetry] = None):
         if not supports_paged_cache(cfg):
             raise ValueError(
                 f"{cfg.arch!r} cannot serve paged; use ServeEngine")
@@ -236,13 +239,16 @@ class Engine:
         self.params, self.cfg = params, cfg
         self.mesh = mesh
         self.prefill_chunk = prefill_chunk
+        self.tel = telemetry if telemetry is not None else \
+            ServeTelemetry.disabled()
         if max_seq_pages is None:
             # default: one sequence may hold up to half the pool
             max_seq_pages = max(4, (n_pages - 1) // 2)
         self.kv = PagedKVCache(cfg, n_slots, n_pages, page_size,
                                max_seq_pages)
         self.sched = Scheduler(self.kv, reserve=reserve,
-                               prefix_cache=prefix_cache)
+                               prefix_cache=prefix_cache,
+                               telemetry=self.tel)
         if mesh is not None:
             # tensor-parallel serving (DESIGN.md §6): params per the
             # path-based rules (folded encoded tensors shard col/row over
@@ -256,9 +262,64 @@ class Engine:
         self.requests = {}
         self._next_rid = 0
         self.clock = 0                     # logical steps
-        self.metrics = {"steps": 0, "decode_tokens": 0,
-                        "prefill_tokens": 0, "prefills": 0,
-                        "prefill_chunks": 0, "occupancy_sum": 0.0}
+        self._init_metrics()
+
+    def _init_metrics(self) -> None:
+        """Registry-backed engine bookkeeping (DESIGN.md §9): replaces
+        the old raw ``self.metrics`` dict — that name survives as a
+        read-only snapshot property for callers/tests."""
+        reg = self.tel.registry
+        self._mac = self.cfg.mac.mode
+        self._c_steps = reg.counter("engine_steps", "engine loop ticks")
+        self._c_decode = reg.counter("decode_tokens",
+                                     "tokens produced by decode steps")
+        self._c_prefill_tok = reg.counter("prefill_tokens",
+                                          "prompt tokens ingested")
+        self._c_prefills = reg.counter("prefills", "completed prefills")
+        self._c_chunks = reg.counter("prefill_chunks",
+                                     "prefill chunk dispatches")
+        self._c_occ = reg.counter("occupancy_sum",
+                                  "per-step busy-slot fraction, summed")
+        self._c_stalls = reg.counter(
+            "stalls", "decode steps a request sat page-starved")
+        self._c_rejects = reg.counter("rejects",
+                                      "requests rejected at submit")
+        self._h_step = reg.histogram("step_ms", "engine step wall ms",
+                                     buckets=(1, 2, 5, 10, 25, 50, 100,
+                                              250, 500, 1000))
+        self._h_dev_decode = reg.histogram(
+            "device_decode_ms", "blocked decode-step device ms",
+            buckets=(0.5, 1, 2, 5, 10, 25, 50, 100, 250, 500))
+        self._h_dev_prefill = reg.histogram(
+            "device_prefill_ms", "blocked prefill-chunk device ms",
+            buckets=(0.5, 1, 2, 5, 10, 25, 50, 100, 250, 500))
+        self._g_pages_free = reg.gauge("pages_free",
+                                       "strictly free pool pages")
+        self._g_pages_cached = reg.gauge(
+            "pages_cached", "ref-0 pages parked in the prefix LRU tier")
+        self._g_pages_held = reg.gauge("pages_held",
+                                       "pages referenced by sequences")
+        self._g_queue = reg.gauge("queue_depth", "requests waiting")
+        self._g_hit_win = reg.gauge(
+            "prefix_windowed_hit_rate",
+            "prefix-cache hit rate over recent admissions")
+
+    @property
+    def metrics(self) -> dict:
+        """Read-only snapshot with the historical key set (the engine
+        itself increments registry metrics, not this dict)."""
+        return {
+            "steps": int(self._c_steps.total()),
+            "decode_tokens": int(self._c_decode.total()),
+            "prefill_tokens": int(self._c_prefill_tok.total()),
+            "prefills": int(self._c_prefills.total()),
+            "prefill_chunks": int(self._c_chunks.total()),
+            "occupancy_sum": self._c_occ.total(),
+        }
+
+    @property
+    def _steps(self) -> int:
+        return int(self._c_steps.total())
 
     def _mesh_ctx(self):
         return _mesh_scope(self.mesh)
@@ -269,11 +330,18 @@ class Engine:
                eos_id: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32).ravel()
         total = int(prompt.shape[0]) + max_new
+        tr = self.tel.tracer
         if total > self.kv.max_seq_tokens:
             # reject BEFORE registering: an admitted oversize request
             # would outgrow its fixed (max_seq_pages,)-row page table and
             # die mid-serve deep in PagedKVCache.set_pages — and a raise
             # after registration would leak a dead rid into self.requests
+            self._c_rejects.inc()
+            if tr.enabled:
+                tr.instant("reject", tid=TID_ENGINE, cat="lifecycle",
+                           args={"plen": int(prompt.shape[0]),
+                                 "max_new": max_new,
+                                 "limit": self.kv.max_seq_tokens})
             raise ValueError(
                 f"request of {prompt.shape[0]} prompt + {max_new} new "
                 f"tokens exceeds the {self.kv.max_seq_tokens}-token "
@@ -287,6 +355,11 @@ class Engine:
                       t_arrive=time.perf_counter())
         self.requests[rid] = req
         self.sched.submit(req)
+        if tr.enabled:
+            tr.thread(req_tid(rid), f"req {rid}")
+            tr.instant("submit", tid=req_tid(rid), cat="lifecycle",
+                       args={"rid": rid, "plen": int(prompt.shape[0]),
+                             "max_new": max_new}, t_s=req.t_arrive)
         return rid
 
     @property
@@ -296,14 +369,21 @@ class Engine:
     def run(self, max_steps: int = 100_000) -> dict:
         """Drive the loop until the queue and all slots drain.
 
-        ``max_steps`` bounds THIS call: ``metrics['steps']`` is lifetime-
-        cumulative, so a reused warm engine (the memoized-jit warmup flow)
-        must not trip the livelock guard on its second trace."""
-        start = self.metrics["steps"]
-        while self.busy:
-            self.step()
-            if self.metrics["steps"] - start > max_steps:
-                raise RuntimeError("engine did not drain (livelock?)")
+        ``max_steps`` bounds THIS call *exactly*: at most ``max_steps``
+        steps run before the livelock guard raises (the guard used to
+        fire one step late), and the bound is per-call — ``engine_steps``
+        is lifetime-cumulative, so a reused warm engine (the memoized-jit
+        warmup flow) must not trip on its second trace.  With
+        ``telemetry.profile_dir`` set, the whole drain runs under a
+        ``jax.profiler`` trace."""
+        start = self._steps
+        with profiler_trace(self.tel.profile_dir):
+            while self.busy:
+                if self._steps - start >= max_steps:
+                    raise RuntimeError(
+                        f"engine did not drain within {max_steps} steps "
+                        "(livelock?)")
+                self.step()
         return self.results()
 
     def results(self) -> dict:
@@ -313,8 +393,40 @@ class Engine:
     # ---- one scheduler tick ------------------------------------------------
 
     def step(self) -> None:
-        self.metrics["steps"] += 1
+        """One scheduler tick, instrumented: the step itself is a span on
+        the engine track, per-step wall time lands in the ``step_ms``
+        histogram, and the allocator/queue gauges refresh after the
+        work."""
+        tr = self.tel.tracer
+        t0 = time.perf_counter()
+        try:
+            self._step_impl()
+        finally:
+            t1 = time.perf_counter()
+            self._h_step.observe((t1 - t0) * 1e3, mac=self._mac)
+            if tr.enabled:
+                tr.complete("step", t0, t1, tid=TID_ENGINE, cat="engine",
+                            args={"step": self._steps})
+            self._update_gauges()
+
+    def _update_gauges(self) -> None:
+        """Pool / queue / prefix gauges (free–held–cached page split,
+        DESIGN.md §9)."""
+        al = self.kv.alloc
+        self._g_pages_free.set(al.n_free_strict)
+        self._g_pages_cached.set(al.n_cached)
+        self._g_pages_held.set(al.n_held)
+        self._g_queue.set(len(self.sched.queue))
+        if self.sched.prefix is not None:
+            self._g_hit_win.set(self.sched.prefix.windowed_hit_rate)
+
+    def _step_impl(self) -> None:
+        self._c_steps.inc()
         self.clock += 1
+        if self.tel.drift is not None:
+            self.tel.drift.maybe_sample(
+                self._steps, self.params, self.cfg,
+                [r.prompt for r in self.sched.slots if r is not None])
         # admit and run ONE prefill chunk per prefilling slot; a short
         # prefill that completes and finishes at EOS frees its slot and
         # pages, so keep admitting until no new slot fills (each request
@@ -334,7 +446,7 @@ class Engine:
         # slots plus slots that ran a prefill chunk (a request that
         # finished its prefill and decodes in the same step counts once)
         worked = set(chunked) | {r.rid for r in active}
-        self.metrics["occupancy_sum"] += len(worked) / self.kv.n_slots
+        self._c_occ.inc(len(worked) / self.kv.n_slots)
         if not active:
             if chunked or not self.sched.queue:
                 return                     # prefill progress / fully idle
@@ -352,18 +464,38 @@ class Engine:
                 self.kv.set_len(r.slot, r.n_cached)
         for req in active:
             tokens[req.slot, 0] = req.out[-1]
+        tr = self.tel.tracer
+        t_d0 = time.perf_counter()
         with self._mesh_ctx():
             toks, self.kv.layers = self._step(
                 self.params, self.kv.layers, jnp.asarray(tokens),
                 self.kv.pages_dev(), self.kv.lens_dev())
+            if self.tel.time_device:
+                # device-time attribution (DESIGN.md §9): block on the
+                # step outputs so [t_d0, t_d1] is dispatch+device time,
+                # separable from the host scheduler time around it
+                jax.block_until_ready((toks, self.kv.layers))
+                t_d1 = time.perf_counter()
+                self._h_dev_decode.observe((t_d1 - t_d0) * 1e3,
+                                           mac=self._mac)
+                if tr.enabled:
+                    tr.complete("device:decode", t_d0, t_d1,
+                                tid=TID_DEVICE, cat="device",
+                                args={"n_active": len(active)})
         toks = np.asarray(toks)
+        if tr.enabled:
+            tr.complete("decode_step", t_d0, time.perf_counter(),
+                        tid=TID_ENGINE, cat="engine",
+                        args={"n_active": len(active),
+                              "rids": [r.rid for r in active]})
         now = time.perf_counter()
         for req in active:
             req.n_cached += 1
             req.out.append(int(toks[req.slot]))
-            self.metrics["decode_tokens"] += 1
+            self._c_decode.inc(1, mac=self._mac)
             if req.done:
                 self.sched.finish(req, now)
+                self._trace_finish(req)
 
     def _admit(self) -> None:
         self.sched.admissions()
@@ -373,10 +505,18 @@ class Engine:
         (growth may evict younger requests; a request that can neither grow
         nor evict stalls for this step)."""
         out = []
+        tr = self.tel.tracer
         for req in sorted(self.sched.active(),
                           key=lambda r: (r.t_arrive, r.rid)):
-            if req.state == DECODING and self.sched.ensure_page(req):
+            if req.state != DECODING:
+                continue
+            if self.sched.ensure_page(req):
                 out.append(req)
+            else:
+                self._c_stalls.inc()
+                if tr.enabled:
+                    tr.instant("stall", tid=req_tid(req.rid),
+                               cat="lifecycle", args={"rid": req.rid})
         return out
 
     def _prefill_chunk(self, req: Request) -> None:
@@ -396,62 +536,129 @@ class Engine:
         padded = np.zeros((1, C), np.int32)
         padded[0, :n] = chunk
         slot = req.slot
+        tr = self.tel.tracer
+        t_c0 = time.perf_counter()
         with self._mesh_ctx():
             toks, self.kv.layers = self._prefill(
                 self.params, self.kv.layers, jnp.asarray(padded),
                 self.kv.pages_dev()[slot:slot + 1],
                 jnp.asarray([start], jnp.int32))
+            if self.tel.time_device:
+                jax.block_until_ready((toks, self.kv.layers))
+                t_c1 = time.perf_counter()
+                self._h_dev_prefill.observe((t_c1 - t_c0) * 1e3,
+                                            mac=self._mac)
+                if tr.enabled:
+                    tr.complete("device:prefill", t_c0, t_c1,
+                                tid=TID_DEVICE, cat="device",
+                                args={"rid": req.rid, "n": n})
+        if tr.enabled:
+            tr.complete("prefill_chunk", t_c0, time.perf_counter(),
+                        tid=TID_ENGINE, cat="engine",
+                        args={"rid": req.rid, "start": start, "n": n})
         req.n_cached = start + n
         self.kv.set_len(slot, req.n_cached)
-        self.metrics["prefill_chunks"] += 1
-        self.metrics["prefill_tokens"] += n
+        self._c_chunks.inc(1, mac=self._mac)
+        self._c_prefill_tok.inc(n, mac=self._mac)
         if req.n_cached < target:
             return                          # more chunks to go
         now = time.perf_counter()
         req.state = DECODING
-        self.metrics["prefills"] += 1
+        req.t_prefill_done = now
+        self._c_prefills.inc()
         self.sched.note_prefilled(req)      # prompt pages → prefix index
         if not req.out:
             first = int(np.asarray(toks)[0, req.plen - 1 - start])
             req.out = [first]
             if req.t_first is None:         # honest TTFT across evictions
                 req.t_first = now
+                if tr.enabled:
+                    tr.instant("first_token", tid=req_tid(req.rid),
+                               cat="lifecycle", args={"rid": req.rid},
+                               t_s=now)
         if req.done:                        # eos on the very first token
             self.sched.finish(req, now)
+            self._trace_finish(req)
+
+    def _trace_finish(self, req: Request) -> None:
+        """Emit the finished request's lifecycle phase spans on its own
+        track.  ``queued`` [submit → admit], ``prefill`` [admit → prefill
+        done], ``decode`` [prefill done → finish] are CONTIGUOUS by
+        construction, so their durations sum to the request latency
+        exactly — the reconciliation the telemetry bench asserts.  (After
+        an eviction the timestamps are the final round's, so the
+        ``queued`` span absorbs the earlier rounds; the sum invariant
+        still holds.)"""
+        tr = self.tel.tracer
+        if not tr.enabled or req.t_finish is None:
+            return
+        tid = req_tid(req.rid)
+        t_admit = req.t_admit if req.t_admit is not None else req.t_arrive
+        t_pf = req.t_prefill_done if req.t_prefill_done is not None \
+            else t_admit
+        args = {"rid": req.rid, "n_out": len(req.out),
+                "evictions": req.n_evictions}
+        tr.complete("request", req.t_arrive, req.t_finish, tid=tid,
+                    cat="lifecycle", args=args)
+        tr.complete("queued", req.t_arrive, t_admit, tid=tid,
+                    cat="phase")
+        tr.complete("prefill", t_admit, t_pf, tid=tid, cat="phase")
+        tr.complete("decode", t_pf, req.t_finish, tid=tid, cat="phase")
 
     # ---- reporting ---------------------------------------------------------
 
     def stats(self) -> dict:
-        fin = [r for r in self.requests.values() if r.state == FINISHED]
-        lat = sorted((r.t_finish - r.t_arrive) for r in fin
-                     if r.t_finish is not None)
-        ttft = sorted((r.t_first - r.t_arrive) for r in fin
-                      if r.t_first is not None)
+        """Snapshot of the registry plus request-derived percentiles.
 
-        def pct(xs, q):
-            if not xs:
-                return float("nan")
-            i = min(len(xs) - 1, int(round(q * (len(xs) - 1))))
-            return xs[i]
+        Latency needs ``t_finish`` so it is over finished requests;
+        TTFT is over EVERY request that has produced a first token —
+        in-flight included (the old finished-only version silently
+        dropped slow in-flight requests, biasing TTFT optimistic under
+        load).  TPOT = time-per-output-token after the first,
+        ``(t_finish - t_first) / (len(out) - 1)``, over finished
+        requests with ≥ 2 tokens.  Percentiles interpolate via the
+        shared ``repro.obs.percentile``."""
+        reqs = list(self.requests.values())
+        fin = [r for r in reqs if r.state == FINISHED]
+        lat = [(r.t_finish - r.t_arrive) for r in fin
+               if r.t_finish is not None]
+        ttft = [(r.t_first - r.t_arrive) for r in reqs
+                if r.t_first is not None]
+        tpot = [(r.t_finish - r.t_first) / (len(r.out) - 1)
+                for r in fin
+                if r.t_finish is not None and r.t_first is not None
+                and len(r.out) > 1]
 
         pfx = self.sched.prefix
         on = pfx is not None        # NOT truthiness — an empty index is falsy
+        al = self.kv.alloc
         m = dict(self.metrics)
         m.update({
             "finished": len(fin),
+            "rejects": int(self._c_rejects.total()),
+            "stalls": int(self._c_stalls.total()),
             "evictions": self.sched.n_evictions,
             "cow_copies": self.sched.n_cow_copies,
             "prefix_cache": on,
             "prefix_hit_tokens": pfx.hit_tokens if on else 0,
             "prefix_lookup_tokens": pfx.lookup_tokens if on else 0,
             "prefix_hit_rate": pfx.hit_rate if on else 0.0,
+            "prefix_windowed_hit_rate": pfx.windowed_hit_rate if on else 0.0,
             "prefix_pages_indexed": len(pfx) if on else 0,
             "prefill_chunk": self.prefill_chunk,
             "occupancy": (m["occupancy_sum"] / m["steps"]
                           if m["steps"] else 0.0),
-            "latency_p50_s": pct(lat, 0.50),
-            "latency_p99_s": pct(lat, 0.99),
-            "ttft_p50_s": pct(ttft, 0.50),
+            "latency_p50_s": percentile(lat, 50),
+            "latency_p99_s": percentile(lat, 99),
+            "ttft_p50_s": percentile(ttft, 50),
+            "ttft_p99_s": percentile(ttft, 99),
+            "tpot_p50_s": percentile(tpot, 50),
+            "tpot_p99_s": percentile(tpot, 99),
+            "step_ms_p50": self._h_step.percentile(50, mac=self._mac),
+            "step_ms_p99": self._h_step.percentile(99, mac=self._mac),
+            "pages_free": al.n_free_strict,
+            "pages_cached": al.n_cached,
+            "pages_held": al.n_held,
             "kv_pool_bytes": self.kv.mem_bytes(),
             "page_size": self.kv.page_size,
             "n_pages": self.kv.n_pages,
@@ -460,6 +667,13 @@ class Engine:
             "mesh": (dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
                      if self.mesh is not None else None),
         })
+        if self.tel.time_device:
+            m["device_decode_ms_p50"] = self._h_dev_decode.percentile(
+                50, mac=self._mac)
+            m["device_prefill_ms_p50"] = self._h_dev_prefill.percentile(
+                50, mac=self._mac)
+        if self.tel.drift is not None and self.tel.drift.last is not None:
+            m["encoded_drift_top1"] = self.tel.drift.last
         return m
 
 

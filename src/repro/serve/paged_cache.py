@@ -26,7 +26,7 @@ from __future__ import annotations
 import functools
 import hashlib
 import math
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -83,6 +83,18 @@ class PageAllocator:
     def n_free(self) -> int:
         """Allocatable pages: truly free + evictable cached."""
         return len(self._free) + len(self._cached)
+
+    @property
+    def n_free_strict(self) -> int:
+        """Truly free pages only (no cached-tier eviction needed) — the
+        ``pages_free`` gauge (DESIGN.md §9)."""
+        return len(self._free)
+
+    @property
+    def n_held(self) -> int:
+        """Pages currently referenced by at least one sequence — the
+        ``pages_held`` gauge."""
+        return len(self._ref)
 
     @property
     def n_cached(self) -> int:
@@ -165,6 +177,8 @@ class PrefixIndex:
     are recomputed.
     """
 
+    WINDOW = 32                                 # admissions per hit window
+
     def __init__(self, alloc: PageAllocator, page_size: int):
         self.alloc = alloc
         self.page_size = page_size
@@ -173,6 +187,10 @@ class PrefixIndex:
         alloc.on_evict = self.drop_page
         self.hit_tokens = 0
         self.lookup_tokens = 0
+        # (hit, lookup) token pairs of the most recent admissions — the
+        # windowed hit-rate gauge, so a long-lived engine's hit rate
+        # tracks the CURRENT traffic mix, not its lifetime average
+        self._recent: "deque[tuple]" = deque(maxlen=self.WINDOW)
 
     def __len__(self) -> int:
         return len(self._pages)
@@ -220,6 +238,7 @@ class PrefixIndex:
         """Commit one admission's hit/lookup token counts to the stats."""
         self.lookup_tokens += n_target
         self.hit_tokens += n_hit_pages * self.page_size
+        self._recent.append((n_hit_pages * self.page_size, n_target))
 
     def insert(self, tokens: np.ndarray, pages: List[int],
                keys: Optional[List[bytes]] = None) -> int:
@@ -254,6 +273,12 @@ class PrefixIndex:
     def hit_rate(self) -> float:
         return self.hit_tokens / self.lookup_tokens if self.lookup_tokens \
             else 0.0
+
+    @property
+    def windowed_hit_rate(self) -> float:
+        """Hit rate over the last ``WINDOW`` admissions only."""
+        lookup = sum(n for _, n in self._recent)
+        return sum(h for h, _ in self._recent) / lookup if lookup else 0.0
 
 
 class PagedKVCache:

@@ -33,12 +33,14 @@ prefill/decode steps.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import List, Optional, Tuple
 
 import numpy as np
 
 from .paged_cache import PagedKVCache, PrefixIndex, pages_for
+from .telemetry import ServeTelemetry, req_tid
 
 QUEUED, PREFILLING, DECODING, FINISHED, EVICTED = (
     "queued", "prefilling", "decoding", "finished", "evicted")
@@ -57,7 +59,9 @@ class Request:
     n_cached: int = 0                  # tokens with KV in the pool
     n_evictions: int = 0
     t_arrive: float = 0.0
+    t_admit: Optional[float] = None    # latest admission into a slot
     t_first: Optional[float] = None    # first generated token (wall)
+    t_prefill_done: Optional[float] = None   # latest prefill completion
     t_finish: Optional[float] = None
     # memoized prefix-index chain digests of the (immutable) prompt, so a
     # blocked head-of-line request isn't re-hashed every scheduler tick
@@ -94,7 +98,8 @@ class Scheduler:
     """FCFS continuous-batching scheduler over a PagedKVCache."""
 
     def __init__(self, kv: PagedKVCache, reserve: str = "conservative",
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 telemetry: Optional[ServeTelemetry] = None):
         if reserve not in ("conservative", "optimistic"):
             raise ValueError(f"unknown reserve policy {reserve!r}")
         self.kv = kv
@@ -105,6 +110,17 @@ class Scheduler:
         self.slots: List[Optional[Request]] = [None] * kv.n_slots
         self.n_evictions = 0
         self.n_cow_copies = 0
+        # telemetry (DESIGN.md §9): the engine shares its bundle so
+        # admit/evict/COW land on the request-lifecycle trace and in the
+        # registry; a standalone scheduler gets a disabled one
+        self.tel = telemetry if telemetry is not None else \
+            ServeTelemetry.disabled()
+        reg = self.tel.registry
+        self._c_admissions = reg.counter("admissions",
+                                         "requests admitted into slots")
+        self._c_evictions = reg.counter("evictions",
+                                        "recompute preemptions")
+        self._c_cow = reg.counter("cow_copies", "copy-on-write page copies")
 
     # ---- queue / slots -----------------------------------------------------
 
@@ -164,9 +180,17 @@ class Scheduler:
             # prefill cursor starts past the mapped prefix pages: only
             # the uncached suffix is ever prefilled
             req.n_cached = len(cached) * self.kv.page_size
+            req.t_admit = time.perf_counter()
             self.slots[slot] = req
             self.kv.set_pages(slot, req.pages)
             self.kv.set_len(slot, req.n_cached)
+            self._c_admissions.inc()
+            tr = self.tel.tracer
+            if tr.enabled:
+                tr.instant("admit", tid=req_tid(req.rid), cat="lifecycle",
+                           args={"rid": req.rid, "slot": slot,
+                                 "cached_tokens": req.n_cached},
+                           t_s=req.t_admit)
             out.append((slot, req))
         return out
 
@@ -205,6 +229,11 @@ class Scheduler:
             self.kv.alloc.free([page])
             self.kv.set_pages(req.slot, req.pages)
             self.n_cow_copies += 1
+            self._c_cow.inc()
+            if self.tel.tracer.enabled:
+                self.tel.tracer.instant(
+                    "cow", tid=req_tid(req.rid), cat="lifecycle",
+                    args={"rid": req.rid, "page": page, "copy": fresh[0]})
         return True
 
     def _alloc_or_evict(self, req: Request, n: int) -> Optional[List[int]]:
@@ -251,6 +280,11 @@ class Scheduler:
         req.state = QUEUED
         req.n_evictions += 1
         self.n_evictions += 1
+        self._c_evictions.inc()
+        if self.tel.tracer.enabled:
+            self.tel.tracer.instant(
+                "evict", tid=req_tid(req.rid), cat="lifecycle",
+                args={"rid": req.rid, "n_out": len(req.out)})
         self.queue.appendleft(req)
 
     def finish(self, req: Request, t: float) -> None:

@@ -226,6 +226,29 @@ def test_run_max_steps_counts_per_call(qwen):
         eng.run(max_steps=1)
 
 
+def test_run_max_steps_bound_is_exact(qwen):
+    """The livelock guard permits at most ``max_steps`` steps — the old
+    ``>`` comparison let max_steps+1 through, so a workload needing
+    exactly K steps passed a K-1 budget."""
+    cfg, params = qwen
+    p = _prompts(cfg, (6,), seed=12)[0]
+
+    def fresh():
+        eng = Engine(params, cfg, n_slots=1, page_size=4, n_pages=32)
+        eng.submit(p, max_new=5)
+        return eng
+
+    eng = fresh()
+    eng.run()
+    k = eng.metrics["steps"]                    # steps this workload needs
+    assert k > 1
+    fresh().run(max_steps=k)                    # exact budget drains
+    eng = fresh()
+    with pytest.raises(RuntimeError, match="did not drain"):
+        eng.run(max_steps=k - 1)                # one short must trip...
+    assert eng.metrics["steps"] == k - 1        # ...after exactly k-1 steps
+
+
 def test_submit_rejects_oversized_request(qwen):
     """plen + max_new must fit the fixed per-sequence page table: the
     boundary request is served, one token more is rejected at submit()

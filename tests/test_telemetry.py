@@ -1,0 +1,304 @@
+"""Observability subsystem (DESIGN.md §9): the shared percentile helper,
+the metrics registry, the lifecycle tracer (Chrome trace-event schema +
+disabled fast path), the engine's trace/metrics wiring (span presence,
+phase/latency reconciliation, in-flight TTFT), and drift-monitor parity
+with the offline logit-agreement measurement."""
+import json
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_model
+from repro.obs import (percentile, percentiles, Counter, Gauge, Histogram,
+                       MetricsRegistry, Tracer, NULL_SPAN, DriftMonitor,
+                       logit_agreement)
+from repro.serve import Engine
+from repro.serve.scheduler import Request, FINISHED, DECODING
+from repro.serve.telemetry import (ServeTelemetry, req_tid, TID_ENGINE,
+                                   TID_DEVICE)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# percentile: the one repo-wide implementation
+# ---------------------------------------------------------------------------
+
+def test_percentile_matches_numpy():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 7, 100):
+        xs = rng.normal(size=n).tolist()
+        for q in (0, 1, 25, 50, 90, 95, 99, 100):
+            assert percentile(xs, q) == pytest.approx(
+                float(np.percentile(xs, q)), rel=1e-12, abs=1e-12)
+    assert np.isnan(percentile([], 50))
+    assert percentiles([1.0, 2.0], (0, 100)) == {0: 1.0, 100: 2.0}
+    with pytest.raises(ValueError):
+        percentile([1.0], 101)
+    with pytest.raises(ValueError):
+        percentile([1.0], -1)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_counter_gauge_labels():
+    reg = MetricsRegistry()
+    c = reg.counter("toks", "tokens")
+    c.inc(3, mac="fp")
+    c.inc(2, mac="encoded")
+    c.inc()                                     # unlabeled series
+    assert c.value(mac="fp") == 3
+    assert c.value(mac="encoded") == 2
+    assert c.total() == 6
+    assert reg.counter("toks") is c             # get-or-create
+    with pytest.raises(ValueError):
+        c.inc(-1)                               # counters only go up
+    g = reg.gauge("depth")
+    g.set(4)
+    g.inc(2)
+    assert g.value() == 6
+    assert np.isnan(g.value(mac="fp"))          # unset series
+    with pytest.raises(TypeError):
+        reg.gauge("toks")                       # kind conflict
+
+
+def test_histogram_exact_percentiles_and_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat", buckets=(1, 5, 10))
+    xs = [0.5, 2, 3, 7, 12, 40]
+    for v in xs:
+        h.observe(v, mac="fp")
+    assert h.count(mac="fp") == len(xs)
+    # exact order statistics over the raw samples, not bucket bounds
+    assert h.percentile(50, mac="fp") == pytest.approx(
+        float(np.percentile(xs, 50)))
+    s = h.summary(mac="fp")
+    assert s["min"] == 0.5 and s["max"] == 40
+    assert s["buckets"] == {"1": 1, "5": 2, "10": 1, "+Inf": 2}
+    assert sum(s["buckets"].values()) == s["count"]
+    assert h.count(mac="encoded") == 0
+    assert np.isnan(h.percentile(50, mac="encoded"))
+
+
+def test_registry_snapshot_schema(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("a", "ca").inc(1, mac="fp")
+    reg.gauge("b").set(2)
+    reg.histogram("c").observe(0.01)
+    snap = reg.snapshot()
+    assert set(snap) == {"counters", "gauges", "histograms"}
+    assert snap["counters"]["a"]["series"] == {"mac=fp": 1.0}
+    assert snap["gauges"]["b"]["series"] == {"": 2.0}
+    assert snap["histograms"]["c"]["series"][""]["count"] == 1
+    p = tmp_path / "m.json"
+    reg.write_json(str(p))
+    assert json.loads(p.read_text()) == json.loads(json.dumps(
+        snap, default=float))
+
+
+# ---------------------------------------------------------------------------
+# tracer: Chrome trace-event schema + disabled fast path
+# ---------------------------------------------------------------------------
+
+def test_tracer_chrome_schema(tmp_path):
+    tr = Tracer(enabled=True)
+    tr.thread(0, "engine")
+    tr.thread(7, "req 7")
+    with tr.span("outer", tid=0, cat="engine", args={"k": 1}):
+        with tr.span("inner", tid=0):
+            pass
+    t0 = tr.now()
+    tr.complete("manual", t0, tr.now(), tid=7)
+    tr.instant("evict", tid=7, args={"rid": 7})
+    ev = tr.chrome_events()
+    meta = [e for e in ev if e["ph"] == "M"]
+    assert [m["args"]["name"] for m in meta] == ["engine", "req 7"]
+    spans = [e for e in ev if e["ph"] == "X"]
+    assert [e["name"] for e in spans] == ["inner", "outer", "manual"]
+    for e in spans:                      # complete events: begin/end match
+        assert {"name", "ph", "ts", "dur", "pid", "tid"} <= set(e)
+        assert e["ts"] >= 0 and e["dur"] >= 0
+    # nesting: inner lies within outer on the same track
+    inner, outer = spans[0], spans[1]
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-6
+    inst = [e for e in ev if e["ph"] == "i"]
+    assert inst[0]["name"] == "evict" and inst[0]["s"] == "t"
+    # exports: object form (Perfetto) and JSONL both round-trip
+    pc, pl = tmp_path / "t.json", tmp_path / "t.jsonl"
+    tr.write_chrome(str(pc))
+    tr.write_jsonl(str(pl))
+    doc = json.loads(pc.read_text())
+    assert doc["traceEvents"] == json.loads(json.dumps(ev, default=float))
+    lines = [json.loads(l) for l in pl.read_text().splitlines()]
+    assert lines == doc["traceEvents"]
+
+
+def test_disabled_tracer_is_free():
+    tr = Tracer(enabled=False)
+    # span() hands back ONE shared no-op singleton: no per-call allocation
+    s1, s2 = tr.span("a", tid=3), tr.span("b", args={"x": 1})
+    assert s1 is NULL_SPAN and s2 is NULL_SPAN
+    with s1:
+        pass
+    tr.thread(0, "engine")
+    tr.complete("c", 0.0, 1.0)
+    tr.instant("d")
+    assert tr.events == [] and tr.chrome_events() == []
+
+
+def test_serve_telemetry_bundle(tmp_path):
+    tel = ServeTelemetry.disabled()
+    assert not tel.tracer.enabled and tel.drift is None
+    tel.write()                                  # all-None export: no-op
+    tel = ServeTelemetry(trace=True)
+    ev = tel.tracer.chrome_events()
+    assert {e["tid"] for e in ev} == {TID_ENGINE, TID_DEVICE}
+    assert req_tid(0) > TID_DEVICE               # request tracks don't clash
+    p = tmp_path / "t.json"
+    tel.write(trace_out=str(p))
+    assert "traceEvents" in json.loads(p.read_text())
+
+
+# ---------------------------------------------------------------------------
+# engine wiring: spans, reconciliation, stats
+# ---------------------------------------------------------------------------
+
+def _pressure_run(params, cfg, *, time_device=False):
+    """2 slots / 6×4-token pages / optimistic reserve: this geometry
+    deterministically evicts AND page-stalls, so every lifecycle event
+    kind lands in the trace."""
+    tel = ServeTelemetry(trace=True, time_device=time_device)
+    eng = Engine(params, cfg, n_slots=2, page_size=4, n_pages=6,
+                 reserve="optimistic", prefill_chunk=4, telemetry=tel)
+    rng = np.random.default_rng(0)
+    rids = [eng.submit(rng.integers(0, cfg.vocab_size, n).astype(np.int32),
+                       max_new=10) for n in (5, 3, 6)]
+    eng.run()
+    return tel, eng, rids
+
+
+def test_engine_trace_lifecycle_and_reconciliation(qwen):
+    cfg, params = qwen
+    tel, eng, rids = _pressure_run(params, cfg, time_device=True)
+    ev = tel.tracer.chrome_events()
+    names = {e["name"] for e in ev}
+    assert {"submit", "admit", "first_token", "prefill_chunk",
+            "decode_step", "step", "evict", "stall", "request",
+            "queued", "prefill", "decode", "device:decode",
+            "device:prefill"} <= names
+    spans = [e for e in ev if e["ph"] == "X"]
+    assert all(e["dur"] >= 0 and e["ts"] >= 0 for e in spans)
+    # engine-track step spans are sequential (the loop never overlaps)
+    steps = [e for e in spans if e["name"] == "step"]
+    ends = [s["ts"] + s["dur"] for s in steps]
+    assert all(a["ts"] >= e - 1e-6 for a, e in zip(steps[1:], ends))
+    # phase spans telescope to the request span exactly (float rounding
+    # only), for every request — including the evicted one
+    for rid in rids:
+        tid = req_tid(rid)
+        mine = {e["name"]: e for e in spans if e["tid"] == tid}
+        total = sum(mine[n]["dur"] for n in ("queued", "prefill", "decode"))
+        assert total == pytest.approx(mine["request"]["dur"], abs=2.0)
+        # ...and the request span is the stats() latency
+        r = eng.requests[rid]
+        assert mine["request"]["dur"] == pytest.approx(
+            (r.t_finish - r.t_arrive) * 1e6, abs=2.0)
+    st = eng.stats()
+    assert st["evictions"] >= 1 and st["stalls"] >= 1
+    assert st["finished"] == 3
+    # device-time attribution: blocked per-call ms histograms populated
+    assert st["device_decode_ms_p50"] > 0
+    assert st["device_prefill_ms_p50"] > 0
+    # registry gauges settle to an idle pool
+    reg = tel.registry
+    assert reg.gauge("pages_held").value() == 0
+    assert reg.gauge("queue_depth").value() == 0
+    # first token per request comes from the prefill's last position, so
+    # decode steps account for the remaining max_new - 1 each
+    assert reg.counter("decode_tokens").value(mac=cfg.mac.mode) == 27
+
+
+def test_tracing_does_not_change_tokens(qwen):
+    cfg, params = qwen
+    _, eng_on, rids_on = _pressure_run(params, cfg)
+    eng_off = Engine(params, cfg, n_slots=2, page_size=4, n_pages=6,
+                     reserve="optimistic", prefill_chunk=4)
+    rng = np.random.default_rng(0)
+    rids_off = [eng_off.submit(
+        rng.integers(0, cfg.vocab_size, n).astype(np.int32), max_new=10)
+        for n in (5, 3, 6)]
+    eng_off.run()
+    ron, roff = eng_on.results(), eng_off.results()
+    assert all(ron[a].tolist() == roff[b].tolist()
+               for a, b in zip(rids_on, rids_off))
+
+
+def test_stats_ttft_includes_inflight_and_tpot(qwen):
+    """TTFT must cover requests that produced a first token but have not
+    finished (the old finished-only version under-reported under load);
+    TPOT is (t_finish - t_first) / (n_out - 1) over finished requests."""
+    cfg, params = qwen
+    eng = Engine(params, cfg, n_slots=2, page_size=4, n_pages=32)
+    done = Request(rid=0, prompt=np.zeros(4, np.int32), max_new=4)
+    done.state, done.out = FINISHED, [1, 2, 3, 4]
+    done.t_arrive, done.t_first, done.t_finish = 100.0, 101.0, 104.0
+    flight = Request(rid=1, prompt=np.zeros(4, np.int32), max_new=4)
+    flight.state, flight.out = DECODING, [1]
+    flight.t_arrive, flight.t_first = 100.0, 109.0   # slow, still running
+    eng.requests = {0: done, 1: flight}
+    st = eng.stats()
+    assert st["latency_p50_s"] == pytest.approx(4.0)   # finished only
+    assert st["ttft_p99_s"] == pytest.approx(9.0 - 0.08)  # in-flight seen
+    assert st["ttft_p50_s"] == pytest.approx(5.0)      # median of {1, 9}
+    assert st["tpot_p50_s"] == pytest.approx(3.0 / 3)  # (104-101)/(4-1)
+
+
+# ---------------------------------------------------------------------------
+# drift monitor: online gauge == offline measurement, by construction
+# ---------------------------------------------------------------------------
+
+def test_drift_monitor_parity_with_offline(qwen):
+    cfg, params = qwen
+    # a perturbed copy stands in for the encoded parameter set
+    params_b = jax.tree_util.tree_map(lambda a: a * 1.02, params)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (6, 9)]
+    reg = MetricsRegistry()
+    mon = DriftMonitor(params, cfg, every=4).bind(reg)
+    got = mon.sample(params_b, cfg, prompts)
+    ref_top1, ref_delta = logit_agreement(params, cfg, params_b, cfg,
+                                          prompts, max_len=mon.max_len)
+    assert got == ref_top1
+    assert reg.gauge("encoded_drift_top1").value() == ref_top1
+    assert reg.gauge("encoded_drift_abs_logit").value() == ref_delta
+    assert reg.counter("drift_samples").total() == 1
+    # cadence: only every Nth step samples; identical params agree fully
+    assert mon.maybe_sample(3, params, cfg, prompts) is None
+    assert mon.maybe_sample(4, params, cfg, prompts) == 1.0
+    assert mon.last == 1.0
+    with pytest.raises(ValueError):
+        DriftMonitor(params, cfg, every=0)
+
+
+def test_drift_monitor_in_engine(qwen):
+    cfg, params = qwen
+    tel = ServeTelemetry(drift=DriftMonitor(params, cfg, every=1))
+    eng = Engine(params, cfg, n_slots=1, page_size=4, n_pages=16,
+                 telemetry=tel)
+    eng.submit(np.arange(5, dtype=np.int32) % cfg.vocab_size, max_new=3)
+    eng.run()
+    st = eng.stats()
+    # dense-vs-dense: the gauge must read exact agreement
+    assert st["encoded_drift_top1"] == 1.0
+    assert tel.registry.counter("drift_samples").total() >= 1
