@@ -107,6 +107,11 @@ class ModelConfig:
     # table (Mosaic on TPU, the blocked XLA lowering elsewhere);
     # 'pallas_interpret' / 'blocked' force those lowerings (tests)
     attention_backend: str = "xla"
+    # max query tokens per slot routed through the fused paged kernel:
+    # 1 = decode only (default); the speculative-decoding verify step
+    # (DESIGN.md §10) raises it to k+1 so batched k-token scoring stays
+    # on the fused path (longer chunks still use the gather path)
+    paged_fused_max_sq: int = 1
     remat: bool = True
     pad_heads_to: int = 1
     vocab_pad_to: int = 1

@@ -45,6 +45,47 @@ def available_modes() -> list:
     return sorted(_REGISTRY)
 
 
+def count_prepared(params, mode: str) -> int:
+    """Number of linears in ``params`` carrying the prepared leaves
+    ``mode``'s executor applies with (its first param suffix, e.g.
+    ``_fw`` for 'encoded_infer').  -1 when the mode needs no prepared
+    leaves (every linear is servable as-is)."""
+    ex = get_executor(mode)
+    if not ex.requires_prepared_params or not ex.param_suffixes:
+        return -1
+    suffix = ex.param_suffixes[0]
+    n = 0
+    stack = [params]
+    while stack:
+        node = stack.pop()
+        if isinstance(node, dict):
+            for k, v in node.items():
+                if isinstance(k, str) and k.endswith(suffix):
+                    n += 1
+                else:
+                    stack.append(v)
+        elif isinstance(node, (list, tuple)):
+            stack.extend(node)
+    return n
+
+
+def check_drafter(params, mode: str) -> None:
+    """Guard for speculative-decoding drafter selection (DESIGN.md §10):
+    a prepared-params executor handed params with NO prepared leaves
+    would silently serve the per-layer fp fallback everywhere — the
+    "cheap drafter" would be the dense model in disguise, speculation
+    gains nothing, and nothing errors.  Raise instead; build the drafter
+    pair with ``repro.serve.encoded.prepare_drafter`` first."""
+    if count_prepared(params, mode) == 0:
+        ex = get_executor(mode)
+        raise ValueError(
+            f"drafter MAC mode {mode!r} requires prepared params "
+            f"(no {ex.param_suffixes[0]!r} leaves found) — every linear "
+            "would fall back to the fp matmul and the drafter would just "
+            "be the dense model; build (draft_params, draft_cfg) with "
+            "repro.serve.encoded.prepare_drafter / prepare_encoded_serving")
+
+
 def mm(x: jnp.ndarray, w: jnp.ndarray, compute_dtype) -> jnp.ndarray:
     """Matmul in compute dtype.
 

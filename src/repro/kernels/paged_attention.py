@@ -21,7 +21,11 @@ is cheap.  This kernel instead walks each sequence's page chain directly:
     cached tokens touches 3 pages of a 1024-token-wide table, not 64;
   * grouped GQA layout and f32 accumulation mirror the dense ``mha`` op
     order (q scaled in storage dtype, logits/softcap/mask/softmax in f32)
-    so greedy decode stays token-identical to the gather path.
+    so greedy decode stays token-identical to the gather path;
+  * 1..k query tokens per slot: the ``Sq`` query tokens fold into the GQA
+    group axis (rows ``s·G + g``) with a per-row causal mask at positions
+    ``lens[b] + s`` — the speculative-decoding verify step (DESIGN.md §10)
+    scores all k+1 positions in one pass at decode-kernel cost.
 
 Backends (``paged_attn(..., backend=...)``):
 
@@ -84,7 +88,7 @@ def _softcap(s, cap):
 # ---------------------------------------------------------------------------
 
 def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, ps, n_pb, scale, cap, G):
+                   m_ref, l_ref, acc_ref, *, ps, n_pb, scale, cap, G, Sq):
     b = pl.program_id(0)
     p = pl.program_id(1)
 
@@ -95,24 +99,30 @@ def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     ln = lens_s[b]                   # tokens already cached for this row
-    nb = ln // ps + 1                # page blocks holding positions <= ln
+    nb = (ln + Sq - 1) // ps + 1     # page blocks holding positions <= ln+Sq-1
 
     @pl.when(p < nb)
     def _block():
-        q = q_ref[0, 0]                              # (Hq, D)
+        q = q_ref[0]                                 # (Sq, Hq, D)
         k = k_ref[0]                                 # (ps, Hkv, D)
         v = v_ref[0]
         hkv = k.shape[1]
+        D = q.shape[-1]
         f32 = jnp.float32
-        # dense-op-order numerics: scale in storage dtype, contract in f32
+        # dense-op-order numerics: scale in storage dtype, contract in f32.
+        # The Sq query tokens fold into the group axis — row r = s·G + g of
+        # the (Hkv, Sq·G) layout is query s, group g — so the online-softmax
+        # recurrence is shape-identical to the Sq == 1 kernel.
         qg = (q * jnp.asarray(scale, q.dtype)
-              ).reshape(hkv, G, q.shape[-1]).astype(f32)
+              ).reshape(Sq, hkv, G, D).transpose(1, 0, 2, 3)
+        qg = qg.reshape(hkv, Sq * G, D).astype(f32)
         kt = k.astype(f32).transpose(1, 0, 2)        # (Hkv, ps, D)
         s = jax.lax.dot_general(qg, kt, (((2,), (2,)), ((0,), (0,))),
-                                preferred_element_type=f32)  # (Hkv, G, ps)
+                                preferred_element_type=f32)  # (Hkv, Sq·G, ps)
         s = _softcap(s, cap)
-        t = p * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
-        d = ln - t                                   # q_pos(=ln) - k_pos
+        t = p * ps + jax.lax.broadcasted_iota(jnp.int32, (Sq * G, ps), 1)
+        rq = jax.lax.broadcasted_iota(jnp.int32, (Sq * G, ps), 0) // G
+        d = (ln + rq) - t                            # q_pos(=ln+s) - k_pos
         ok = (d >= 0) & (d < win_s[0])
         s = jnp.where(ok[None], s, NEG_INF)
         m_prev = m_ref[...]
@@ -122,14 +132,16 @@ def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = l_ref[...] * alpha + pexp.sum(-1)
         vt = v.astype(f32).transpose(1, 0, 2)        # (Hkv, ps, D)
         pv = jax.lax.dot_general(pexp, vt, (((2,), (1,)), ((0,), (0,))),
-                                 preferred_element_type=f32)  # (Hkv, G, D)
+                                 preferred_element_type=f32)  # (Hkv, Sq·G, D)
         acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
         m_ref[...] = m_new
 
     @pl.when(p == n_pb - 1)
     def _finalize():
         out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
-        o_ref[0, 0] = out.reshape(-1, out.shape[-1]).astype(o_ref.dtype)
+        hkv, _, D = acc_ref.shape
+        out = out.reshape(hkv, Sq, G, D).transpose(1, 0, 2, 3)
+        o_ref[0] = out.reshape(Sq, hkv * G, D).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "cap", "G",
@@ -137,9 +149,11 @@ def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
 def paged_attn_pallas(q, pool_k, pool_v, pages, lens, window, *,
                       scale: float, cap=None, G: int = 1,
                       interpret: bool = False):
-    """q (B, 1, Hq, D); pool_k/v (n_pages, ps, Hkv, D); pages (B, P) int32;
-    lens (B,) int32; window () int32 (``_NO_WINDOW`` ⇒ global)."""
-    B, _, Hq, D = q.shape
+    """q (B, Sq, Hq, D); pool_k/v (n_pages, ps, Hkv, D); pages (B, P) int32;
+    lens (B,) int32; window () int32 (``_NO_WINDOW`` ⇒ global).  Query s of
+    row b sits at absolute position ``lens[b] + s``; its K/V must already be
+    scattered into the pools."""
+    B, S, Hq, D = q.shape
     ps, Hkv = pool_k.shape[1], pool_k.shape[2]
     n_pb = pages.shape[1]
     win = jnp.asarray(window, jnp.int32).reshape(1)
@@ -147,24 +161,24 @@ def paged_attn_pallas(q, pool_k, pool_v, pages, lens, window, *,
     def page_idx(b, p, pages_s, lens_s, win_s):
         # clamp past-lens blocks to the last needed page: the index map
         # repeats, so no new DMA is issued for skipped blocks
-        p_eff = jnp.minimum(p, lens_s[b] // ps)
+        p_eff = jnp.minimum(p, (lens_s[b] + S - 1) // ps)
         return (pages_s[b, p_eff], 0, 0, 0)
 
     kern = functools.partial(_decode_kernel, ps=ps, n_pb=n_pb, scale=scale,
-                             cap=cap, G=G)
+                             cap=cap, G=G, Sq=S)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, n_pb),
         in_specs=[
-            pl.BlockSpec((1, 1, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
+            pl.BlockSpec((1, S, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
             pl.BlockSpec((1, ps, Hkv, D), page_idx),
             pl.BlockSpec((1, ps, Hkv, D), page_idx),
         ],
-        out_specs=pl.BlockSpec((1, 1, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, S, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((Hkv, G), jnp.float32),
-            pltpu.VMEM((Hkv, G), jnp.float32),
-            pltpu.VMEM((Hkv, G, D), jnp.float32),
+            pltpu.VMEM((Hkv, S * G), jnp.float32),
+            pltpu.VMEM((Hkv, S * G), jnp.float32),
+            pltpu.VMEM((Hkv, S * G, D), jnp.float32),
         ],
     )
     return pl.pallas_call(
@@ -188,19 +202,23 @@ def _paged_attn_blocked(q, pool_k, pool_v, pages, lens, window, *,
     Pallas path additionally skips per row).  Rows whose blocks are fully
     masked contribute exp(NEG_INF − m) == 0, so short rows match the
     per-row skip exactly."""
-    B, _, Hq, D = q.shape
+    B, S, Hq, D = q.shape
     ps, Hkv = pool_k.shape[1], pool_k.shape[2]
     f32 = jnp.float32
-    qg = (q[:, 0] * jnp.asarray(scale, q.dtype)
-          ).reshape(B, Hkv, G, D).astype(f32)
+    # fold the Sq query tokens into the group axis (row r = s·G + g), same
+    # layout as the Pallas kernel
+    qg = (q * jnp.asarray(scale, q.dtype)
+          ).reshape(B, S, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(B, Hkv, S * G, D).astype(f32)
     win = jnp.asarray(window, jnp.int32)
     bp = max(1, bk // ps)                            # pages per K block
     blk = bp * ps                                    # tokens per K block
     P = pages.shape[1]
     if P % bp:                                       # pad table → scratch
         pages = jnp.pad(pages, ((0, 0), (0, bp - P % bp)))
-    nb = jnp.max(lens) // blk + 1
+    nb = (jnp.max(lens) + S - 1) // blk + 1
     t0 = jnp.arange(blk)
+    rq = jnp.arange(S * G, dtype=jnp.int32) // G     # query index per row
 
     def body(j, carry):
         m, l, acc = carry
@@ -212,9 +230,11 @@ def _paged_attn_blocked(q, pool_k, pool_v, pages, lens, window, *,
         s = jnp.einsum("bhgd,bphd->bhgp", qg, kb,
                        preferred_element_type=f32)
         s = _softcap(s, cap)
-        d = lens[:, None] - (j * blk + t0)[None, :]  # q_pos(=lens) - k_pos
+        # q_pos(=lens+s) - k_pos, per (query-row, key) pair: (B, S·G, blk)
+        d = (lens[:, None, None] + rq[None, :, None]
+             - (j * blk + t0)[None, None, :])
         ok = (d >= 0) & (d < win)
-        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        s = jnp.where(ok[:, None], s, NEG_INF)
         m_new = jnp.maximum(m, s.max(-1))
         alpha = jnp.exp(m - m_new)
         pexp = jnp.exp(s - m_new[..., None])
@@ -223,12 +243,13 @@ def _paged_attn_blocked(q, pool_k, pool_v, pages, lens, window, *,
             "bhgp,bphd->bhgd", pexp, vb, preferred_element_type=f32)
         return m_new, l, acc
 
-    init = (jnp.full((B, Hkv, G), NEG_INF, f32),
-            jnp.zeros((B, Hkv, G), f32),
-            jnp.zeros((B, Hkv, G, D), f32))
+    init = (jnp.full((B, Hkv, S * G), NEG_INF, f32),
+            jnp.zeros((B, Hkv, S * G), f32),
+            jnp.zeros((B, Hkv, S * G, D), f32))
     m, l, acc = jax.lax.fori_loop(0, nb, body, init)
     out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+    out = out.reshape(B, Hkv, S, G, D).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -248,14 +269,19 @@ def _local(q, pool_k, pool_v, pages, lens, win, *, scale, cap, G, backend):
 def paged_attn(q, pool_k, pool_v, pages, lens, *, scale: float,
                window=None, cap=None, kv_of_q=None,
                backend: str = "auto") -> jnp.ndarray:
-    """Fused paged-attention decode step.
+    """Fused paged-attention step over 1..k query tokens per slot.
 
-    q (B, 1, Hq, D) · pool_k/v (n_pages, ps, Hkv, D) · pages (B, P) ·
-    lens (B,) → (B, 1, Hq, D) in q.dtype.  ``kv_of_q`` must be the
-    identity or uniform grouped map (see ``gqa_group``); callers with
-    irregular maps use the gather path.  ``window`` is None, an int, or a
-    traced scalar (negative never reaches here — blocks resolve −1 to a
-    huge window).
+    q (B, Sq, Hq, D) · pool_k/v (n_pages, ps, Hkv, D) · pages (B, P) ·
+    lens (B,) → (B, Sq, Hq, D) in q.dtype.  Query s of row b sits at
+    absolute position ``lens[b] + s`` (causal within the block), and its
+    K/V must already be scattered into the pools — the decode step uses
+    Sq == 1, the speculative-decoding verify step Sq == k+1 (DESIGN.md
+    §10).  Callers must keep ``lens[b] + Sq <= P·page_size``.  ``kv_of_q``
+    must be the identity or uniform grouped map (see ``gqa_group``);
+    callers with irregular maps use the gather path.  ``window`` is None,
+    an int, or a traced scalar (negative never reaches here — blocks
+    resolve −1 to a huge window).  Sq is static: each distinct value
+    compiles its own kernel (the engine uses exactly two).
 
     With an active mesh whose kv-head count divides the model axis, the
     chosen backend runs shard-local per kv-head shard (q/pools/output
@@ -264,9 +290,6 @@ def paged_attn(q, pool_k, pool_v, pages, lens, *, scale: float,
     collectives.
     """
     B, S, Hq, D = q.shape
-    if S != 1:
-        raise ValueError(f"paged_attn is a decode kernel (Sq == 1), got "
-                         f"Sq={S}; prefill chunks use the gather path")
     Hkv = pool_k.shape[2]
     G = Hq // Hkv if kv_of_q is None else gqa_group(kv_of_q, Hq, Hkv)
     if G is None:

@@ -21,6 +21,12 @@ with the paper's encoded-MAC inference mode.
   PYTHONPATH=src python -m repro.launch.serve --reduced --continuous \
       --mac encoded
 
+  # speculative decoding (DESIGN.md §10): draft 4 tokens/slot/round with
+  # a lower-m-bits encoded drafter, verify in one batched dense forward
+  # (greedy output token-identical to non-speculative serving):
+  PYTHONPATH=src python -m repro.launch.serve --reduced --continuous \
+      --spec-decode 4 --draft encoded --draft-m-bits 24
+
   # tensor-parallel encoded serving over the model axis (DESIGN.md §6;
   # folded bitplane tensors shard col/row-parallel, per-device bytes ÷ TP):
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -102,6 +108,24 @@ def main():
                          "through the page table with per-row lens "
                          "early-exit (Mosaic on TPU, the blocked XLA "
                          "lowering of the same algorithm elsewhere)")
+    # speculative decoding (DESIGN.md §10) — continuous engine only
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft K tokens per slot "
+                         "per round with the drafter, verify all K+1 "
+                         "positions in one batched dense forward, commit "
+                         "the longest agreeing prefix + bonus token "
+                         "(greedy output token-identical to K=0); 0 = off")
+    ap.add_argument("--draft", default="self",
+                    choices=["self", "encoded"],
+                    help="drafter for --spec-decode: 'self' = the "
+                         "verifier's own params (speedup from dispatch "
+                         "amortization alone), 'encoded' = a lower-m-bits "
+                         "encoded bundle built by prepare_drafter (the "
+                         "paper's accuracy knob as the draft model)")
+    ap.add_argument("--draft-m-bits", type=int, default=24,
+                    help="encoding width M for --draft encoded (coarser "
+                         "than the verifier's --m-bits → cheaper drafts, "
+                         "lower acceptance)")
     # encoded-serving knobs (ignored unless --mac encoded)
     ap.add_argument("--encoding", default="search",
                     choices=["search", "exact"],
@@ -178,6 +202,25 @@ def main():
         print(f"[encoded-serving] ready in {time.time() - t0:.1f}s "
               f"({'cache hit' if info['loaded'] else 'searched+folded'})")
 
+    if args.spec_decode and not args.continuous:
+        ap.error("--spec-decode requires --continuous (the draft/verify "
+                 "rounds run against the paged KV cache)")
+    draft_params = draft_cfg = None
+    if args.spec_decode and args.draft == "encoded":
+        from repro.serve import prepare_drafter
+        verifier = (params, cfg) if args.mac == "encoded" else None
+        t0 = time.time()
+        draft_params, draft_cfg, dinfo = prepare_drafter(
+            params_ref, cfg_ref, m_bits=args.draft_m_bits,
+            verifier=verifier, n_samples=args.calib_samples,
+            refine=args.calib_refine, calib_batches=args.calib_batches,
+            backend=args.encoded_backend, force=args.force_calib)
+        src = ("verifier artifacts" if dinfo.get("shared_with_verifier")
+               else "searched+folded" if not dinfo.get("loaded")
+               else "cache hit")
+        print(f"[spec-decode] encoded drafter m_bits={args.draft_m_bits} "
+              f"ready in {time.time() - t0:.1f}s ({src})")
+
     rng = np.random.default_rng(0)
     reqs = [rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
             for _ in range(args.requests)]
@@ -197,7 +240,8 @@ def main():
                         reserve=args.reserve, mesh=mesh,
                         prefix_cache=args.prefix_cache,
                         prefill_chunk=args.prefill_chunk,
-                        telemetry=tel)
+                        telemetry=tel, spec_decode=args.spec_decode,
+                        draft_params=draft_params, draft_cfg=draft_cfg)
         t0 = time.time()
         rids = [engine.submit(r, max_new=args.max_new) for r in reqs]
         outs = engine.run()
@@ -217,6 +261,14 @@ def main():
                   f"tokens, {st['prefix_pages_indexed']} pages indexed, "
                   f"{st['prefill_chunks']} prefill chunks of "
                   f"{st['prefill_chunk']})")
+        if args.spec_decode:
+            print(f"  spec: k={st['spec_decode_k']} "
+                  f"acceptance={st['spec_acceptance_rate']:.3f} "
+                  f"tokens/round={st['spec_tokens_per_round']:.2f} "
+                  f"({st['spec_accepted_tokens']}/"
+                  f"{st['spec_draft_tokens']} drafts accepted over "
+                  f"{st['spec_rounds']} rounds, "
+                  f"drafter={st['draft_mac_mode']})")
         if "ttft_p50_s" in st:
             print(f"  ttft_p50={st['ttft_p50_s']:.3f}s "
                   f"tpot_p50={st.get('tpot_p50_s', float('nan')):.4f}s "

@@ -137,7 +137,12 @@ def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
         pages, lens = cache["pages"], cache["lens"]
         pk = scatter_kv(cache["pool_k"], pages, positions, k)
         pv = scatter_kv(cache["pool_v"], pages, positions, v)
-        fused = (S == 1 and cfg.attention_backend != "xla"
+        # ``paged_fused_max_sq`` (default 1) widens the fused gate for the
+        # speculative-decoding verify step: the kernel scores Sq query
+        # rows at positions lens..lens+Sq-1, which is exactly this
+        # branch's contract (positions = lens[:, None] + arange(S))
+        fused = (S <= max(1, cfg.paged_fused_max_sq)
+                 and cfg.attention_backend != "xla"
                  and gqa_group(kv_map, cfg.n_heads_p, cfg.n_kv_p)
                  is not None)
         if fused:

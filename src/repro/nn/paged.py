@@ -20,9 +20,12 @@ starting at arbitrary offsets (chunked prefill, partial-prefix prefill
 after a prefix-cache hit — DESIGN.md §7) share one code path.
 
 ``paged_attn_decode`` over the gathered view is the *reference* path
-(``cfg.attention_backend == 'xla'``); decode steps can instead route
-through the fused page-walk kernel in ``repro.kernels.paged_attention``
-(DESIGN.md §8), which this op also validates.
+(``cfg.attention_backend == 'xla'``); decode steps — and the
+speculative-decoding verify pass, whose Sq == k+1 query rows all start
+at ``lens`` (DESIGN.md §10) — can instead route through the fused
+page-walk kernel in ``repro.kernels.paged_attention`` (DESIGN.md §8),
+which this op also validates (the k-query parity sweep scores both
+against each other).
 """
 from __future__ import annotations
 

@@ -14,6 +14,13 @@ shows it without stopping the engine.
 from here, so the online gauge and the offline BENCH number are the same
 computation by construction (parity asserted in
 ``tests/test_telemetry.py``).
+
+Under speculative decoding (DESIGN.md §10) the replay is redundant work:
+every verify step already computes the dense logits at each drafted
+position, and draft-vs-target top-1 agreement IS the drift number.  The
+engine feeds those per-round counts into ``observe_agreement`` instead
+of calling ``maybe_sample`` — the gauge stays live at zero extra
+forwards (previously drift + verification doubled the dense work).
 """
 from __future__ import annotations
 
@@ -68,6 +75,9 @@ class DriftMonitor:
         self.last: Optional[float] = None
         self.last_delta: Optional[float] = None
         self._g_agree = self._g_delta = self._c_samples = None
+        # observe_agreement accumulators (spec-decode reuse path)
+        self._obs_match = 0
+        self._obs_total = 0
 
     def bind(self, registry) -> "DriftMonitor":
         self._g_agree = registry.gauge(
@@ -101,3 +111,20 @@ class DriftMonitor:
         if step % self.every:
             return None
         return self.sample(params, cfg, prompts)
+
+    def observe_agreement(self, n_match: int, n_total: int) -> None:
+        """Publish drift from agreement counts the caller already has —
+        the speculative-decoding engine's draft-vs-verify top-1 matches,
+        measured on the verifier's dense logits during verification, so
+        the gauge costs zero extra forwards (DESIGN.md §10).  Counts
+        accumulate over the run (the gauge is the running agreement
+        rate); |Δlogit| is not observable this way and keeps its last
+        sampled value."""
+        if n_total <= 0:
+            return
+        self._obs_match += int(n_match)
+        self._obs_total += int(n_total)
+        self.last = self._obs_match / self._obs_total
+        if self._g_agree is not None:
+            self._g_agree.set(self.last)
+            self._c_samples.inc()

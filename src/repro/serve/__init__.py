@@ -4,7 +4,9 @@ from .engine import (make_prefill, make_decode_step, make_paged_prefill,
 from .paged_cache import PageAllocator, PagedKVCache, PrefixIndex, pages_for
 from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
                         FINISHED, EVICTED)
-from .encoded import (prepare_encoded_serving, capture_activation_stats,
-                      family_row_weights, search_family_encodings,
-                      fold_linear_params)
+from .encoded import (prepare_encoded_serving, prepare_drafter,
+                      capture_activation_stats, family_row_weights,
+                      search_family_encodings, fold_linear_params)
+from .spec import (greedy_accept, rejection_sample, make_spec_draft,
+                   make_spec_verify)
 from .telemetry import ServeTelemetry, req_tid, TID_ENGINE, TID_DEVICE

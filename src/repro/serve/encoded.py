@@ -429,3 +429,38 @@ def _flat_keys(tree, prefix=""):
             yield from _flat_keys(v, prefix + k + "/")
         else:
             yield prefix + k
+
+
+def prepare_drafter(params, cfg, *, m_bits=24, verifier=None, **kw):
+    """Build the speculative-decoding drafter pair (DESIGN.md §10):
+    ``(draft_params, draft_cfg, info)`` for ``Engine(spec_decode=k,
+    draft_params=..., draft_cfg=...)``.
+
+    The drafter is the paper's own accuracy/efficiency knob: the same fp
+    params pushed through ``prepare_encoded_serving`` at a *lower*
+    ``m_bits`` (coarser output encodings → cheaper MACs, lower top-1
+    agreement → lower acceptance rate).  Calibration knobs and the
+    artifact ``cache_dir`` are shared with the verifier's bundle
+    machinery, so drafter bundles sit beside (and cache-hit like) the
+    serving bundle.
+
+    ``verifier``: optional already-built ``(params_enc, cfg_enc)`` pair —
+    when its encodings were searched at the SAME ``m_bits`` the drafter
+    reuses the verifier's folded artifacts outright (no second
+    search/fold); otherwise a separate lower-m bundle is built.
+    """
+    if verifier is not None:
+        p_v, c_v = verifier
+        mb = {int(m.spec.m_bits)
+              for m in (getattr(c_v.mac, "macs", None) or {}).values()}
+        if mb == {int(m_bits)}:
+            from repro.core.macexec import check_drafter
+            check_drafter(p_v, c_v.mac.mode)
+            return p_v, c_v, {"shared_with_verifier": True,
+                              "m_bits": int(m_bits)}
+    params_d, cfg_d, info = prepare_encoded_serving(
+        params, cfg, m_bits=m_bits, **kw)
+    from repro.core.macexec import check_drafter
+    check_drafter(params_d, cfg_d.mac.mode)
+    info = dict(info, shared_with_verifier=False, m_bits=int(m_bits))
+    return params_d, cfg_d, info

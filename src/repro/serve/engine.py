@@ -37,13 +37,16 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models import apply_model, init_cache, supports_paged_cache
+from repro.core.macexec import check_drafter
+from repro.models import (apply_model, init_cache, init_paged_cache,
+                          supports_paged_cache)
 from repro.obs import percentile, profiler_trace
 from repro.parallel.sharding import param_specs, set_mesh
 from repro.parallel.statesharding import cache_specs
 from .paged_cache import PagedKVCache, pages_for
 from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
                         FINISHED)
+from .spec import greedy_accept, make_spec_draft, make_spec_verify
 from .telemetry import ServeTelemetry, TID_DEVICE, TID_ENGINE, req_tid
 
 
@@ -198,6 +201,24 @@ def _jitted_paged_steps(cfg, mesh):
                 jax.jit(make_paged_decode_step(cfg), donate_argnums=(1,)))
 
 
+@functools.lru_cache(maxsize=32)
+def _jitted_spec_steps_cached(draft_cfg, cfg, k, mesh):
+    return (jax.jit(make_spec_draft(draft_cfg, k), donate_argnums=(1,)),
+            jax.jit(make_spec_verify(cfg, k), donate_argnums=(1,)))
+
+
+def _jitted_spec_steps(draft_cfg, cfg, k, mesh):
+    """Jitted (draft, verify) pair for speculative decoding, memoized
+    like ``_jitted_paged_steps`` (same warm-engine rationale; same
+    unhashable-cfg fallback — 'encoded_infer' drafters carry a per-family
+    ``macs`` dict)."""
+    try:
+        return _jitted_spec_steps_cached(draft_cfg, cfg, k, mesh)
+    except TypeError:
+        return (jax.jit(make_spec_draft(draft_cfg, k), donate_argnums=(1,)),
+                jax.jit(make_spec_verify(cfg, k), donate_argnums=(1,)))
+
+
 # ---------------------------------------------------------------------------
 # continuous-batching engine
 # ---------------------------------------------------------------------------
@@ -223,6 +244,16 @@ class Engine:
     ``reserve='optimistic'`` admits on prompt pages alone and grows
     page-by-page, reclaiming unreferenced cached pages and then evicting
     the youngest running request on exhaustion.
+
+    ``spec_decode=k`` (k ≥ 1) turns on self-drafting speculative decoding
+    (DESIGN.md §10): each decode round drafts k greedy tokens per slot
+    with ``draft_params``/``draft_cfg`` (default: the serving params —
+    pure multi-token lookahead) in ONE jitted dispatch, verifies all k+1
+    positions in one batched forward through the same paged pools, and
+    commits the longest agreeing prefix plus a bonus token.  Greedy
+    output is token-identical to ``spec_decode=0`` for ANY drafter; the
+    drafter only moves the acceptance rate.  Build a cheap drafter with
+    ``repro.serve.encoded.prepare_drafter`` (lower-m-bits encoded path).
     """
 
     def __init__(self, params, cfg, *, n_slots: int = 4,
@@ -230,7 +261,8 @@ class Engine:
                  max_seq_pages: Optional[int] = None,
                  reserve: str = "conservative", mesh=None,
                  prefill_chunk: int = 32, prefix_cache: bool = False,
-                 telemetry: Optional[ServeTelemetry] = None):
+                 telemetry: Optional[ServeTelemetry] = None,
+                 spec_decode: int = 0, draft_params=None, draft_cfg=None):
         if not supports_paged_cache(cfg):
             raise ValueError(
                 f"{cfg.arch!r} cannot serve paged; use ServeEngine")
@@ -259,6 +291,37 @@ class Engine:
             self.kv.layers = jax.device_put(
                 self.kv.layers, cache_specs(self.kv.layers, mesh))
         self._prefill, self._step = _jitted_paged_steps(cfg, mesh)
+        self.spec_k = int(spec_decode)
+        if self.spec_k < 0:
+            raise ValueError("spec_decode must be >= 0")
+        if self.spec_k:
+            self.draft_cfg = draft_cfg if draft_cfg is not None else cfg
+            check_drafter(draft_params if draft_params is not None
+                          else params, self.draft_cfg.mac.mode)
+            # the drafter writes into the verifier's pools, so its paged
+            # cache geometry must match exactly (layer pytree + shapes)
+            want = jax.eval_shape(
+                lambda: init_paged_cache(cfg, 2, page_size)["layers"])
+            got = jax.eval_shape(
+                lambda: init_paged_cache(self.draft_cfg, 2,
+                                         page_size)["layers"])
+            if (jax.tree_util.tree_structure(want)
+                    != jax.tree_util.tree_structure(got)
+                    or [(a.shape, a.dtype) for a in
+                        jax.tree_util.tree_leaves(want)]
+                    != [(a.shape, a.dtype) for a in
+                        jax.tree_util.tree_leaves(got)]):
+                raise ValueError(
+                    "spec_decode drafter cache geometry mismatch: "
+                    "draft_cfg must produce the same paged KV layout "
+                    "(layers/kv-heads/head-dim/dtype) as the serving cfg")
+            if draft_params is None:
+                self.draft_params = self.params   # sharded copy if mesh
+            else:
+                self.draft_params = (_shard_params(draft_params, mesh)
+                                     if mesh is not None else draft_params)
+            self._draft, self._verify = _jitted_spec_steps(
+                self.draft_cfg, cfg, self.spec_k, mesh)
         self.requests = {}
         self._next_rid = 0
         self.clock = 0                     # logical steps
@@ -303,6 +366,22 @@ class Engine:
         self._g_hit_win = reg.gauge(
             "prefix_windowed_hit_rate",
             "prefix-cache hit rate over recent admissions")
+        # speculative decoding (DESIGN.md §10)
+        self._c_spec_rounds = reg.counter(
+            "spec_rounds", "speculative draft+verify rounds")
+        self._c_spec_prop = reg.counter(
+            "spec_draft_tokens", "draft tokens considered by verification")
+        self._c_spec_acc = reg.counter(
+            "spec_accepted_tokens", "draft tokens accepted by verification")
+        self._g_spec_rate = reg.gauge(
+            "spec_acceptance_rate",
+            "accepted / considered draft tokens, cumulative")
+        self._h_dev_draft = reg.histogram(
+            "device_draft_ms", "blocked draft-k device ms",
+            buckets=(0.5, 1, 2, 5, 10, 25, 50, 100, 250, 500))
+        self._h_dev_verify = reg.histogram(
+            "device_verify_ms", "blocked verify-step device ms",
+            buckets=(0.5, 1, 2, 5, 10, 25, 50, 100, 250, 500))
 
     @property
     def metrics(self) -> dict:
@@ -423,7 +502,9 @@ class Engine:
     def _step_impl(self) -> None:
         self._c_steps.inc()
         self.clock += 1
-        if self.tel.drift is not None:
+        if self.tel.drift is not None and not self.spec_k:
+            # under spec decoding drift comes free from verification
+            # (observe_agreement in _spec_round) — no replay forwards
             self.tel.drift.maybe_sample(
                 self._steps, self.params, self.cfg,
                 [r.prompt for r in self.sched.slots if r is not None])
@@ -441,6 +522,9 @@ class Engine:
             for req in todo:
                 chunked.add(req.rid)
                 self._prefill_chunk(req)
+        if self.spec_k:
+            self._spec_round(chunked)
+            return
         active = self._runnable()
         # occupancy counts every slot that did work this step: decoding
         # slots plus slots that ran a prefill chunk (a request that
@@ -496,6 +580,142 @@ class Engine:
             if req.done:
                 self.sched.finish(req, now)
                 self._trace_finish(req)
+
+    def _spec_round(self, chunked) -> None:
+        """One speculative draft+verify round (DESIGN.md §10).
+
+        Per active slot: draft k greedy tokens with the drafter (ONE
+        jitted dispatch — the k steps are unrolled in the trace), verify
+        all k+1 positions in one batched dense forward (which scatters
+        dense K/V over the drafted positions BEFORE attending, so every
+        committed cache position is dense-exact), then commit the longest
+        agreeing prefix plus the verifier's bonus token.  Rollback of
+        rejected tokens is pure host arithmetic on ``n_cached`` — the
+        rejected positions sit past the device lens (masked on read) and
+        are overwritten by the next round's scatter, and no pages move.
+
+        Each slot's acceptance is capped at its ensured *write window* w:
+        ``ensure_write_window`` guarantees w exclusively-owned positions,
+        so verify logits past w-1 may have read scratch-page garbage and
+        must not be trusted (a lucky argmax match there would commit a
+        token whose KV was never written).  Slots that cannot even secure
+        w = 1 stall exactly like the non-speculative path.  Non-active
+        slotted requests get their device lens pushed to the end of their
+        owned pages so the round's k+1 batched writes land in the scratch
+        page — never in a page a peer might share."""
+        k = self.spec_k
+        tr = self.tel.tracer
+        active, wins = [], {}
+        for req in sorted(self.sched.active(),
+                          key=lambda r: (r.t_arrive, r.rid)):
+            if req.state != DECODING:
+                continue                    # evicted mid-loop by a peer
+            want = min(k + 1, req.max_new - len(req.out))
+            if self.sched.ensure_write_window(req, want):
+                wins[req.rid] = want
+            elif want > 1 and self.sched.ensure_write_window(req, 1):
+                wins[req.rid] = 1
+            else:
+                self._c_stalls.inc()
+                if tr.enabled:
+                    tr.instant("stall", tid=req_tid(req.rid),
+                               cat="lifecycle", args={"rid": req.rid})
+                continue
+            active.append(req)
+        active = [r for r in active if r.state == DECODING]  # late evicts
+        worked = set(chunked) | {r.rid for r in active}
+        self._c_occ.inc(len(worked) / self.kv.n_slots)
+        if not active:
+            if chunked or not self.sched.queue:
+                return
+            raise RuntimeError(
+                "page pool too small for the queued request "
+                f"(need {self.sched._pages_needed(self.sched.queue[0])}"
+                f" pages, {self.kv.alloc.n_free} free)")
+        act = {r.rid for r in active}
+        for r in self.sched.slots:
+            if r is None:
+                continue
+            if r.rid in act:
+                self.kv.set_len(r.slot, r.n_cached)
+            else:
+                self.kv.set_len(r.slot, len(r.pages) * self.kv.page_size)
+        tokens = np.zeros((self.kv.n_slots, 1), np.int32)
+        for req in active:
+            tokens[req.slot, 0] = req.out[-1]
+        pages_dev, lens_dev = self.kv.pages_dev(), self.kv.lens_dev()
+        tok_dev = jnp.asarray(tokens)
+        t_d0 = time.perf_counter()
+        with self._mesh_ctx():
+            d_toks, self.kv.layers = self._draft(
+                self.draft_params, self.kv.layers, tok_dev,
+                pages_dev, lens_dev)
+            if self.tel.time_device:
+                jax.block_until_ready((d_toks, self.kv.layers))
+                t_d1 = time.perf_counter()
+                self._h_dev_draft.observe((t_d1 - t_d0) * 1e3,
+                                          mac=self.draft_cfg.mac.mode)
+                if tr.enabled:
+                    tr.complete("device:draft", t_d0, t_d1, tid=TID_DEVICE,
+                                cat="device", args={"k": k,
+                                                    "n_active": len(active)})
+        if tr.enabled:
+            tr.complete("draft_step", t_d0, time.perf_counter(),
+                        tid=TID_ENGINE, cat="engine",
+                        args={"k": k, "rids": [r.rid for r in active]})
+        t_v0 = time.perf_counter()
+        with self._mesh_ctx():
+            # d_toks stays on device: verify concatenates it with the
+            # round's input tokens inside the trace, so draft → verify is
+            # two back-to-back dispatches with no host sync between them
+            v_toks, self.kv.layers = self._verify(
+                self.params, self.kv.layers, tok_dev, d_toks,
+                pages_dev, lens_dev)
+            if self.tel.time_device:
+                jax.block_until_ready((v_toks, self.kv.layers))
+                t_v1 = time.perf_counter()
+                self._h_dev_verify.observe((t_v1 - t_v0) * 1e3,
+                                           mac=self._mac)
+                if tr.enabled:
+                    tr.complete("device:verify", t_v0, t_v1,
+                                tid=TID_DEVICE, cat="device",
+                                args={"k": k, "n_active": len(active)})
+        d_np, v_np = np.asarray(d_toks), np.asarray(v_toks)
+        if tr.enabled:
+            tr.complete("verify_step", t_v0, time.perf_counter(),
+                        tid=TID_ENGINE, cat="engine",
+                        args={"k": k, "rids": [r.rid for r in active]})
+        now = time.perf_counter()
+        r_acc = r_cons = 0
+        for req in active:
+            cons = min(k, wins[req.rid] - 1)   # draft tokens we may trust
+            d, v = d_np[req.slot], v_np[req.slot]
+            n_acc = greedy_accept(d[:cons], v[:cons])
+            emit = [int(x) for x in d[:n_acc]] + [int(v[n_acc])]
+            emit = emit[:req.max_new - len(req.out)]
+            if req.eos_id is not None:
+                for j, t in enumerate(emit):
+                    if t == req.eos_id:
+                        emit = emit[:j + 1]
+                        break
+            req.out.extend(emit)
+            req.n_cached += len(emit)
+            self._c_decode.inc(len(emit), mac=self._mac)
+            r_acc += n_acc
+            r_cons += cons
+            if req.done:
+                self.sched.finish(req, now)
+                self._trace_finish(req)
+        self._c_spec_rounds.inc()
+        self._c_spec_prop.inc(r_cons)
+        self._c_spec_acc.inc(r_acc)
+        prop, acc = self._c_spec_prop.total(), self._c_spec_acc.total()
+        if prop:
+            self._g_spec_rate.set(acc / prop)
+        if self.tel.drift is not None:
+            # drift for free: draft-vs-target top-1 agreement measured on
+            # the verifier's dense logits — no replay forwards
+            self.tel.drift.observe_agreement(r_acc, r_cons)
 
     def _admit(self) -> None:
         self.sched.admissions()
@@ -672,6 +892,25 @@ class Engine:
                 50, mac=self._mac)
             m["device_prefill_ms_p50"] = self._h_dev_prefill.percentile(
                 50, mac=self._mac)
+        if self.spec_k:
+            rounds = int(self._c_spec_rounds.total())
+            prop = int(self._c_spec_prop.total())
+            acc = int(self._c_spec_acc.total())
+            m.update({
+                "spec_decode_k": self.spec_k,
+                "spec_rounds": rounds,
+                "spec_draft_tokens": prop,
+                "spec_accepted_tokens": acc,
+                "spec_acceptance_rate": acc / prop if prop else 0.0,
+                "spec_tokens_per_round": (m["decode_tokens"] / rounds
+                                          if rounds else 0.0),
+                "draft_mac_mode": self.draft_cfg.mac.mode,
+            })
+            if self.tel.time_device:
+                m["device_draft_ms_p50"] = self._h_dev_draft.percentile(
+                    50, mac=self.draft_cfg.mac.mode)
+                m["device_verify_ms_p50"] = self._h_dev_verify.percentile(
+                    50, mac=self._mac)
         if self.tel.drift is not None and self.tel.drift.last is not None:
             m["encoded_drift_top1"] = self.tel.drift.last
         return m

@@ -210,7 +210,21 @@ class Scheduler:
         sequence always makes progress, so the system can never livelock).
         False → no page and no younger victim: ``req`` keeps its pages but
         stalls this step (it retries once something older frees pages)."""
-        while req.n_cached >= len(req.pages) * self.kv.page_size:
+        return self.ensure_write_window(req, 1)
+
+    def ensure_write_window(self, req: Request, n: int) -> bool:
+        """``ensure_page`` generalized to the next ``n`` write positions
+        ``[n_cached, n_cached + n)`` — the speculative draft+verify round
+        writes k+1 positions per step (DESIGN.md §10), and every one of
+        them must land in a page this request exclusively owns (a shared
+        prefix page written mid-draft would corrupt a peer's context).
+        Growth and COW use the same alloc→reclaim→evict-younger ladder;
+        on False the request keeps the pages it already holds (partial
+        growth is fine — they hold no unread data) and stalls, or the
+        engine retries with a smaller window."""
+        ps = self.kv.page_size
+        last = req.n_cached + n - 1
+        while last >= len(req.pages) * ps:
             grown = self._alloc_or_evict(req, 1)
             if grown is None:
                 return False
@@ -218,22 +232,23 @@ class Scheduler:
             self.kv.set_pages(req.slot, req.pages)
         # copy-on-write: never write into a page another sequence (or the
         # prefix index via a peer) still references
-        idx = req.n_cached // self.kv.page_size
-        page = req.pages[idx]
-        if self.kv.alloc.refcount(page) > 1:
-            fresh = self._alloc_or_evict(req, 1)
-            if fresh is None:
-                return False
-            self.kv.copy_page(page, fresh[0])
-            req.pages[idx] = fresh[0]
-            self.kv.alloc.free([page])
-            self.kv.set_pages(req.slot, req.pages)
-            self.n_cow_copies += 1
-            self._c_cow.inc()
-            if self.tel.tracer.enabled:
-                self.tel.tracer.instant(
-                    "cow", tid=req_tid(req.rid), cat="lifecycle",
-                    args={"rid": req.rid, "page": page, "copy": fresh[0]})
+        for idx in range(req.n_cached // ps, last // ps + 1):
+            page = req.pages[idx]
+            if self.kv.alloc.refcount(page) > 1:
+                fresh = self._alloc_or_evict(req, 1)
+                if fresh is None:
+                    return False
+                self.kv.copy_page(page, fresh[0])
+                req.pages[idx] = fresh[0]
+                self.kv.alloc.free([page])
+                self.kv.set_pages(req.slot, req.pages)
+                self.n_cow_copies += 1
+                self._c_cow.inc()
+                if self.tel.tracer.enabled:
+                    self.tel.tracer.instant(
+                        "cow", tid=req_tid(req.rid), cat="lifecycle",
+                        args={"rid": req.rid, "page": page,
+                              "copy": fresh[0]})
         return True
 
     def _alloc_or_evict(self, req: Request, n: int) -> Optional[List[int]]:

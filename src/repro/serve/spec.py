@@ -1,0 +1,151 @@
+"""Speculative decoding: self-drafting draft/verify steps + rejection
+sampling (DESIGN.md §10).
+
+The paper's encoded MAC is a cheap, accuracy-tunable approximation of the
+dense model (``--m-bits``), so the encoded model is a free built-in
+drafter: draft k tokens ahead per slot with the cheap path, then score
+all k+1 positions in ONE batched dense forward over the same paged cache
+and keep the longest agreeing prefix plus a bonus token.  Two properties
+make this exact rather than approximate:
+
+  * **Verify overwrites draft KV.**  Both steps share the verifier's page
+    pools.  The draft loop scatters *approximate* K/V at positions
+    ``C..C+k-1`` (C = tokens already cached); the verify forward re-runs
+    those positions through the dense projections and — because
+    ``attn_apply``'s paged branch scatters before attending — overwrites
+    them with dense K/V *before* any read.  Every committed cache
+    position is therefore dense-exact, and greedy verification is
+    token-identical to plain dense decode by induction.
+
+  * **Rollback is host arithmetic.**  The engine's lens bookkeeping is
+    host-side (`n_cached` per request, pushed to the device table every
+    round), so rejecting draft tokens never touches the allocator: the
+    positions beyond the accepted prefix simply stay past ``lens`` —
+    masked on read, overwritten by the next round's scatter.  No pages
+    are freed or leaked by rejection (pages stay owned by the request).
+
+``rejection_sample`` is the standard speculative-sampling acceptance rule
+(accept draft token x_i with prob ``min(1, p_target/p_draft)``, on the
+first rejection resample from the clipped residual ``max(0, p_t - p_d)``,
+emit a bonus token from the target when all k drafts survive) — the
+emitted sequence is distributed exactly as target-model ancestral
+sampling, which the hypothesis harness in ``tests/test_spec_decode.py``
+checks statistically.  The engine's greedy mode is the ``temperature → 0``
+specialization ``greedy_accept`` (prefix match against the target argmax).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import apply_model
+
+
+# ---------------------------------------------------------------------------
+# acceptance rules (host-side, numpy)
+# ---------------------------------------------------------------------------
+
+def greedy_accept(draft: Sequence[int], target: Sequence[int]) -> int:
+    """Length of the longest prefix where ``draft[i] == target[i]`` —
+    the greedy acceptance rule (``target`` is the verifier argmax at each
+    drafted position; position i's target was computed with drafts < i in
+    context, so a match means dense decode would have emitted it too)."""
+    n = 0
+    for d, t in zip(draft, target):
+        if int(d) != int(t):
+            break
+        n += 1
+    return n
+
+
+def rejection_sample(draft_probs: np.ndarray, target_probs: np.ndarray,
+                     draft_tokens: Sequence[int],
+                     rng: np.random.Generator) -> Tuple[list, int]:
+    """Speculative rejection sampling (Leviathan et al.): returns
+    ``(emitted_tokens, n_accepted)``.
+
+    draft_probs (k, V): drafter's distribution at each drafted position;
+    target_probs (k+1, V): verifier's distribution at the same positions
+    plus the bonus position; draft_tokens (k,): tokens the drafter
+    actually sampled.  Emits between 1 and k+1 tokens whose joint law is
+    exactly ancestral sampling from ``target_probs`` — the distribution-
+    identity property the hypothesis tests check.
+    """
+    k = len(draft_tokens)
+    assert draft_probs.shape[0] == k and target_probs.shape[0] == k + 1
+    out: list = []
+    for i in range(k):
+        x = int(draft_tokens[i])
+        p_t = float(target_probs[i, x])
+        p_d = float(draft_probs[i, x])
+        if p_d <= 0.0 or rng.random() < min(1.0, p_t / p_d):
+            # p_d == 0 ⇒ the drafter could not have sampled x; treat as
+            # accept-with-prob-min(1, p_t/0⁺) = 1 iff p_t > 0 — only
+            # reachable with inconsistent inputs, kept total for safety
+            out.append(x)
+            continue
+        resid = np.maximum(target_probs[i] - draft_probs[i], 0.0)
+        tot = float(resid.sum())
+        if tot <= 0.0:
+            # target ≤ draft everywhere ⇒ distributions equal ⇒ the accept
+            # branch had prob 1; unreachable except through float dust
+            tok = int(np.argmax(target_probs[i]))
+        else:
+            tok = int(rng.choice(resid.shape[0], p=resid / tot))
+        return out + [tok], i
+    bonus = np.asarray(target_probs[k], np.float64)
+    bonus = bonus / bonus.sum()
+    return out + [int(rng.choice(bonus.shape[0], p=bonus))], k
+
+
+# ---------------------------------------------------------------------------
+# jitted draft / verify steps over the paged cache
+# ---------------------------------------------------------------------------
+
+def make_spec_draft(cfg, k: int):
+    """One jitted call that drafts ``k`` greedy tokens per slot against
+    the shared paged cache.  The k decode steps are unrolled inside the
+    trace, so a round costs ONE dispatch instead of k — on dispatch-bound
+    hosts this, not drafter FLOPs, is where speculation's speedup lives.
+    ``tokens`` is (B, 1) (each slot's last emitted token); returns
+    ``(draft_tokens (B, k) int32, layers)`` with the drafter's
+    (approximate) K/V scattered at positions ``lens..lens+k-1``."""
+    def draft(params, layers, tokens, pages, lens):
+        toks = []
+        t = tokens
+        for i in range(k):
+            cache = {"layers": layers, "pages": pages, "lens": lens + i}
+            logits, new_cache, _ = apply_model(params, cfg, t, cache=cache)
+            layers = new_cache["layers"]
+            t = jnp.argmax(logits[:, -1:, :cfg.vocab_size],
+                           axis=-1).astype(jnp.int32)
+            toks.append(t)
+        return jnp.concatenate(toks, axis=1), layers
+
+    return draft
+
+
+def make_spec_verify(cfg, k: int):
+    """One jitted dense forward scoring all k+1 positions per slot.
+    ``tokens`` (B, 1) + ``draft`` (B, k) concatenate on device (no host
+    round-trip between draft and verify dispatches); the forward scatters
+    dense K/V over positions ``lens..lens+k`` — overwriting the drafter's
+    approximate K/V — then attends through the fused k-query kernel when
+    the backend allows (``paged_fused_max_sq`` is raised to k+1 here).
+    Returns ``(target_argmax (B, k+1) int32, layers)``."""
+    import dataclasses
+    cfg_v = dataclasses.replace(
+        cfg, paged_fused_max_sq=max(cfg.paged_fused_max_sq, k + 1))
+
+    def verify(params, layers, tokens, draft, pages, lens):
+        seq = jnp.concatenate([tokens, draft], axis=1)       # (B, k+1)
+        cache = {"layers": layers, "pages": pages, "lens": lens}
+        logits, new_cache, _ = apply_model(params, cfg_v, seq, cache=cache)
+        target = jnp.argmax(logits[..., :cfg_v.vocab_size],
+                            axis=-1).astype(jnp.int32)
+        return target, new_cache["layers"]
+
+    return verify

@@ -20,12 +20,17 @@ reports through (DESIGN.md §9):
     engine wraps ``run()`` in ``obs.profiler_trace``.
 
 Track-id layout for the tracer: tid 0 = the engine loop (step /
-prefill-chunk / decode spans, nested), tid 1 = device time, and one
-track per request (``req_tid``) carrying its lifecycle — the contiguous
-``queued`` → ``prefill`` → ``decode`` phase spans (whose durations sum
-to the request latency by construction — the reconciliation the
-telemetry bench checks) plus submit/admit/first-token/evict/stall/COW
-instants.
+prefill-chunk / decode spans — plus ``draft_step``/``verify_step``
+spans per speculative round under ``spec_decode``, DESIGN.md §10 —
+nested), tid 1 = device time (``device:prefill``/``device:decode``, and
+``device:draft``/``device:verify`` when speculating with
+``time_device``), and one track per request (``req_tid``) carrying its
+lifecycle — the contiguous ``queued`` → ``prefill`` → ``decode`` phase
+spans (whose durations sum to the request latency by construction — the
+reconciliation the telemetry bench checks) plus
+submit/admit/first-token/evict/stall/COW instants.  Speculation adds
+``spec_rounds``/``spec_draft_tokens``/``spec_accepted_tokens`` counters
+and the ``spec_acceptance_rate`` gauge to the registry.
 """
 from __future__ import annotations
 

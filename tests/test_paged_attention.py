@@ -41,11 +41,13 @@ def _pool_case(rng, B, Hq, Hkv, D, ps, P):
 
 def _reference(q, pool_k, pool_v, pages, lens, kv_map, *, scale, window,
                cap):
+    S = q.shape[1]
     ck, cv = gather_kv(pool_k, pages), gather_kv(pool_v, pages)
     k_pos = jnp.arange(ck.shape[1])
-    k_valid = k_pos[None, :] < (lens + 1)[:, None]
+    k_valid = k_pos[None, :] < (lens + S)[:, None]
+    q_pos = lens[:, None] + jnp.arange(S)[None, :]
     return paged_attn_decode(q, ck, cv, kv_map, scale=scale,
-                             q_pos=lens[:, None], k_pos=k_pos,
+                             q_pos=q_pos, k_pos=k_pos,
                              k_valid=k_valid, window=window, cap=cap)
 
 
@@ -90,13 +92,59 @@ def test_op_lens_sweep_page_boundaries(backend):
                                    rtol=2e-5, atol=2e-6, err_msg=f"lens {ln}")
 
 
-def test_op_rejects_prefill_and_irregular_maps():
+@pytest.mark.parametrize("backend", ["blocked", "pallas_interpret"])
+@pytest.mark.parametrize("S", [2, 4])
+def test_op_kquery_matches_gather_reference(backend, S):
+    """k-query decode (speculative verify, DESIGN.md §10): Sq > 1 query
+    tokens per slot at positions lens..lens+Sq-1 — fast tier-1 case."""
+    rng = np.random.default_rng(11 + S)
+    ps, P, B, D = 4, 6, 3, 16
+    q1, pool_k, pool_v, pages, kv_map = _pool_case(rng, B, 4, 2, D, ps, P)
+    q = jnp.asarray(rng.normal(size=(B, S, 4, D)), jnp.float32)
+    lens = jnp.asarray([0, ps - 1, 2 * ps + 1][:B], jnp.int32)
+    scale = 1.0 / np.sqrt(D)
+    ref = _reference(q, pool_k, pool_v, pages, lens, kv_map, scale=scale,
+                     window=None, cap=None)
+    out = paged_attn(q, pool_k, pool_v, pages, lens, scale=scale,
+                     kv_of_q=kv_map, backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["blocked", "pallas_interpret"])
+@pytest.mark.parametrize("ps,Hq,Hkv,window,cap", [
+    (4, 4, 2, None, None),       # GQA group 2
+    (8, 4, 1, None, None),       # MQA
+    (4, 4, 2, 7, None),          # sliding window
+    (4, 4, 2, None, 30.0),       # logit softcap
+])
+@pytest.mark.parametrize("S", [1, 2, 4, 8])
+def test_op_kquery_sweep(backend, S, ps, Hq, Hkv, window, cap):
+    """Full Sq × geometry × feature sweep at page-boundary lens (slow:
+    the spec-decode CI job runs it; tier-1 keeps the fast case above)."""
+    rng = np.random.default_rng(hash((S, ps, Hq, Hkv, window or 0)) % 2**32)
+    B, D, P = 4, 16, 6
+    _, pool_k, pool_v, pages, kv_map = _pool_case(rng, B, Hq, Hkv, D, ps, P)
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
+    # page-boundary lens; keep lens + S within the page table
+    lens = jnp.asarray([0, ps - 1, ps, min(2 * ps + 1, P * ps - S)][:B],
+                       jnp.int32)
+    scale = 1.0 / np.sqrt(D)
+    ref = _reference(q, pool_k, pool_v, pages, lens, kv_map, scale=scale,
+                     window=window, cap=cap)
+    out = paged_attn(q, pool_k, pool_v, pages, lens, scale=scale,
+                     window=window, cap=cap, kv_of_q=kv_map, backend=backend)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-6)
+
+
+def test_op_rejects_irregular_maps():
+    """The fused kernel requires a uniform GQA grouping; irregular q→kv
+    maps must fall back (or raise when forced)."""
     rng = np.random.default_rng(0)
     q, pool_k, pool_v, pages, kv_map = _pool_case(rng, 2, 4, 2, 8, 4, 4)
     lens = jnp.asarray([3, 5], jnp.int32)
-    with pytest.raises(ValueError, match="decode kernel"):
-        paged_attn(jnp.concatenate([q, q], axis=1), pool_k, pool_v, pages,
-                   lens, scale=1.0)
     irregular = np.array([0, 1, 1, 0], np.int32)   # not grouped
     assert gqa_group(irregular, 4, 2) is None
     with pytest.raises(ValueError, match="gather path"):
