@@ -100,6 +100,55 @@ def _paged_attn_bench(rng):
                                                          n=10)
         out[f"paged_attn_{name}_interpret_us"] = time_call(f_int, q, lens,
                                                            n=3)
+    out.update(_paged_attn_dtype_axis(rng, B, Hq, Hkv, D, ps, P, kv_map,
+                                      q, scale))
+    return out
+
+
+def _paged_attn_dtype_axis(rng, B, Hq, Hkv, D, ps, P, kv_map, q, scale):
+    """Fused blocked decode step per KV-pool dtype (bf16/int8/int4,
+    DESIGN.md §11) at lens=512, reporting the achieved pool bytes/s so
+    the bandwidth-bound claim is measured, not asserted: the quantized
+    pools stream 3.6–6.4x fewer bytes per cached token (value bytes +
+    the f32 per-token scale rows); whether fewer bytes buys wall time
+    depends on the host — on a 1-core CPU the step is bound by the f32
+    attention matvec, on HBM-backed accelerators the pool read is the
+    bottleneck the kernel targets.  Every slot reads its OWN page chain
+    here (unlike the shared-chain rows above) so the streamed bytes are
+    real, not cache-resident."""
+    from repro.kernels.paged_attention import paged_attn
+    from repro.quant.kvcache import quantize_kv
+
+    ln = 512
+    P_own = ln // ps
+    n_pages = 1 + B * P_own
+    dense_k = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, D)),
+                          jnp.float32)
+    dense_v = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, D)),
+                          jnp.float32)
+    pg = np.zeros((B, P_own), np.int32)
+    for b in range(B):
+        pg[b] = 1 + b * P_own + np.arange(P_own)
+    pages = jnp.asarray(pg)
+    lens = jnp.full((B,), ln, jnp.int32)
+    out = {}
+    for mode in ("bf16", "int8", "int4"):
+        if mode == "bf16":
+            pk, pv, sk, sv = dense_k, dense_v, None, None
+        else:
+            pk, sk = quantize_kv(dense_k, mode)
+            pv, sv = quantize_kv(dense_v, mode)
+        f = jax.jit(lambda q, lens, pk=pk, pv=pv, sk=sk, sv=sv: paged_attn(
+            q, pk, pv, pages, lens, scale=scale, kv_of_q=kv_map,
+            backend="blocked", scale_k=sk, scale_v=sv))
+        us = time_call(f, q, lens, n=10)
+        bytes_per_step = B * ln * (
+            2 * Hkv * pk.shape[-1] * pk.dtype.itemsize
+            + (2 * Hkv * 4 if sk is not None else 0))
+        out[f"paged_attn_{mode}_us"] = us
+        out[f"paged_attn_{mode}_pool_bytes"] = bytes_per_step
+        out[f"paged_attn_{mode}_gb_per_s"] = bytes_per_step / (us / 1e6) \
+            / 1e9
     return out
 
 
@@ -118,4 +167,8 @@ def csv_lines(res):
         f"{res['paged_attn_long_blocked_us']:.1f},lens=512",
         f"kernel_paged_attn_short_blocked,"
         f"{res['paged_attn_short_blocked_us']:.1f},lens=40",
+    ] + [
+        f"kernel_paged_attn_{m}_blocked,{res[f'paged_attn_{m}_us']:.1f},"
+        f"{res[f'paged_attn_{m}_gb_per_s']:.3f}GB/s"
+        for m in ("bf16", "int8", "int4")
     ]

@@ -112,6 +112,12 @@ class ModelConfig:
     # (DESIGN.md §10) raises it to k+1 so batched k-token scoring stays
     # on the fused path (longer chunks still use the gather path)
     paged_fused_max_sq: int = 1
+    # paged KV-cache storage (DESIGN.md §11): 'bf16' = dense pages in
+    # compute_dtype (the historical layout); 'int8'/'int4' store pages
+    # quantized with per-token per-kv-head f32 scale rows in side pools,
+    # dequantized inside the paged-attention page loop (2–4x fewer pool
+    # bytes per token → more slots / longer contexts at equal HBM)
+    kv_cache_dtype: str = "bf16"
     remat: bool = True
     pad_heads_to: int = 1
     vocab_pad_to: int = 1

@@ -60,9 +60,21 @@ from jax.experimental.pallas import tpu as pltpu
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.sharding import AXIS_MODEL, get_mesh, shard_map_norep
+from repro.quant.kvcache import kv_mode_of, unpack_int4
 
 NEG_INF = -2.0e38                    # finite f32 sentinel (matches mha)
 _NO_WINDOW = np.int32(2 ** 30)       # "no sliding window" resolves to huge
+
+
+def _dequant_block(x, scale, mode):
+    """Per-page-block dequant shared by both lowerings (DESIGN.md §11):
+    pool bytes ``x (..., H, Dp)`` + scale rows ``(..., H)`` → f32
+    ``(..., H, D)``.  ``mode == 'bf16'`` is the dense passthrough."""
+    if mode == "int8":
+        return x.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+    if mode == "int4":
+        return unpack_int4(x) * scale.astype(jnp.float32)[..., None]
+    return x.astype(jnp.float32)
 
 
 def gqa_group(kv_of_q, n_q: int, n_kv: int) -> Optional[int]:
@@ -87,8 +99,13 @@ def _softcap(s, cap):
 # Pallas kernel
 # ---------------------------------------------------------------------------
 
-def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
-                   m_ref, l_ref, acc_ref, *, ps, n_pb, scale, cap, G, Sq):
+def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, *rest,
+                   ps, n_pb, scale, cap, G, Sq, mode="bf16"):
+    if mode == "bf16":
+        sk_ref = sv_ref = None
+        o_ref, m_ref, l_ref, acc_ref = rest
+    else:                            # quantized pools: scale-row refs ride
+        sk_ref, sv_ref, o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     p = pl.program_id(1)
 
@@ -104,8 +121,13 @@ def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
     @pl.when(p < nb)
     def _block():
         q = q_ref[0]                                 # (Sq, Hq, D)
-        k = k_ref[0]                                 # (ps, Hkv, D)
-        v = v_ref[0]
+        # in-loop dequant (DESIGN.md §11): quantized pools stream their
+        # narrow bytes HBM→VMEM and widen to f32 here, per page block —
+        # the dense-width K/V view never exists anywhere
+        k = _dequant_block(k_ref[0], None if sk_ref is None else sk_ref[0],
+                           mode)                     # (ps, Hkv, D) f32
+        v = _dequant_block(v_ref[0], None if sv_ref is None else sv_ref[0],
+                           mode)
         hkv = k.shape[1]
         D = q.shape[-1]
         f32 = jnp.float32
@@ -116,7 +138,7 @@ def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
         qg = (q * jnp.asarray(scale, q.dtype)
               ).reshape(Sq, hkv, G, D).transpose(1, 0, 2, 3)
         qg = qg.reshape(hkv, Sq * G, D).astype(f32)
-        kt = k.astype(f32).transpose(1, 0, 2)        # (Hkv, ps, D)
+        kt = k.transpose(1, 0, 2)                    # (Hkv, ps, D)
         s = jax.lax.dot_general(qg, kt, (((2,), (2,)), ((0,), (0,))),
                                 preferred_element_type=f32)  # (Hkv, Sq·G, ps)
         s = _softcap(s, cap)
@@ -130,7 +152,7 @@ def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
         alpha = jnp.exp(m_prev - m_new)
         pexp = jnp.exp(s - m_new[..., None])
         l_ref[...] = l_ref[...] * alpha + pexp.sum(-1)
-        vt = v.astype(f32).transpose(1, 0, 2)        # (Hkv, ps, D)
+        vt = v.transpose(1, 0, 2)                    # (Hkv, ps, D)
         pv = jax.lax.dot_general(pexp, vt, (((2,), (1,)), ((0,), (0,))),
                                  preferred_element_type=f32)  # (Hkv, Sq·G, D)
         acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
@@ -148,13 +170,19 @@ def _decode_kernel(pages_s, lens_s, win_s, q_ref, k_ref, v_ref, o_ref,
                                              "interpret"))
 def paged_attn_pallas(q, pool_k, pool_v, pages, lens, window, *,
                       scale: float, cap=None, G: int = 1,
-                      interpret: bool = False):
-    """q (B, Sq, Hq, D); pool_k/v (n_pages, ps, Hkv, D); pages (B, P) int32;
+                      interpret: bool = False,
+                      scale_k=None, scale_v=None):
+    """q (B, Sq, Hq, D); pool_k/v (n_pages, ps, Hkv, Dp); pages (B, P) int32;
     lens (B,) int32; window () int32 (``_NO_WINDOW`` ⇒ global).  Query s of
     row b sits at absolute position ``lens[b] + s``; its K/V must already be
-    scattered into the pools."""
+    scattered into the pools.  Quantized pools (int8, or uint8 = packed
+    int4 with Dp = D/2) pass their ``scale_k/scale_v (n_pages, ps, Hkv)``
+    f32 rows; page blocks of values and scales stream together and widen
+    in-loop (DESIGN.md §11)."""
     B, S, Hq, D = q.shape
     ps, Hkv = pool_k.shape[1], pool_k.shape[2]
+    Dp = pool_k.shape[3]
+    mode = kv_mode_of(pool_k)        # static: dtype is a trace constant
     n_pb = pages.shape[1]
     win = jnp.asarray(window, jnp.int32).reshape(1)
 
@@ -164,16 +192,26 @@ def paged_attn_pallas(q, pool_k, pool_v, pages, lens, window, *,
         p_eff = jnp.minimum(p, (lens_s[b] + S - 1) // ps)
         return (pages_s[b, p_eff], 0, 0, 0)
 
+    def page_idx3(b, p, pages_s, lens_s, win_s):
+        p_eff = jnp.minimum(p, (lens_s[b] + S - 1) // ps)
+        return (pages_s[b, p_eff], 0, 0)
+
     kern = functools.partial(_decode_kernel, ps=ps, n_pb=n_pb, scale=scale,
-                             cap=cap, G=G, Sq=S)
+                             cap=cap, G=G, Sq=S, mode=mode)
+    in_specs = [
+        pl.BlockSpec((1, S, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
+        pl.BlockSpec((1, ps, Hkv, Dp), page_idx),
+        pl.BlockSpec((1, ps, Hkv, Dp), page_idx),
+    ]
+    operands = [q, pool_k, pool_v]
+    if mode != "bf16":
+        in_specs += [pl.BlockSpec((1, ps, Hkv), page_idx3),
+                     pl.BlockSpec((1, ps, Hkv), page_idx3)]
+        operands += [scale_k, scale_v]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(B, n_pb),
-        in_specs=[
-            pl.BlockSpec((1, S, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
-            pl.BlockSpec((1, ps, Hkv, D), page_idx),
-            pl.BlockSpec((1, ps, Hkv, D), page_idx),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, S, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((Hkv, S * G), jnp.float32),
@@ -186,7 +224,7 @@ def paged_attn_pallas(q, pool_k, pool_v, pages, lens, window, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
-    )(pages, lens, win, q, pool_k, pool_v)
+    )(pages, lens, win, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -194,7 +232,8 @@ def paged_attn_pallas(q, pool_k, pool_v, pages, lens, window, *,
 # ---------------------------------------------------------------------------
 
 def _paged_attn_blocked(q, pool_k, pool_v, pages, lens, window, *,
-                        scale: float, cap=None, G: int = 1, bk: int = 128):
+                        scale: float, cap=None, G: int = 1, bk: int = 128,
+                        scale_k=None, scale_v=None):
     """The kernel's algorithm in plain XLA: a ``fori_loop`` over K blocks
     of ``max(1, bk // page_size)`` pages (~``bk`` tokens, the flash
     kernel's K-block width — single-page steps drown in loop overhead on
@@ -204,6 +243,7 @@ def _paged_attn_blocked(q, pool_k, pool_v, pages, lens, window, *,
     per-row skip exactly."""
     B, S, Hq, D = q.shape
     ps, Hkv = pool_k.shape[1], pool_k.shape[2]
+    mode = kv_mode_of(pool_k)
     f32 = jnp.float32
     # fold the Sq query tokens into the group axis (row r = s·G + g), same
     # layout as the Pallas kernel
@@ -223,8 +263,12 @@ def _paged_attn_blocked(q, pool_k, pool_v, pages, lens, window, *,
     def body(j, carry):
         m, l, acc = carry
         pid = jax.lax.dynamic_slice_in_dim(pages, j * bp, bp, 1)  # (B, bp)
-        kb = jnp.take(pool_k, pid, axis=0).astype(f32)
-        vb = jnp.take(pool_v, pid, axis=0).astype(f32)
+        # gather narrow pool bytes, then widen per block — the same
+        # in-loop dequant as the Pallas kernel (DESIGN.md §11)
+        skb = None if scale_k is None else jnp.take(scale_k, pid, axis=0)
+        svb = None if scale_v is None else jnp.take(scale_v, pid, axis=0)
+        kb = _dequant_block(jnp.take(pool_k, pid, axis=0), skb, mode)
+        vb = _dequant_block(jnp.take(pool_v, pid, axis=0), svb, mode)
         kb = kb.reshape(B, blk, Hkv, D)              # (B, bp, ps, H, D) →
         vb = vb.reshape(B, blk, Hkv, D)
         s = jnp.einsum("bhgd,bphd->bhgp", qg, kb,
@@ -256,19 +300,23 @@ def _paged_attn_blocked(q, pool_k, pool_v, pages, lens, window, *,
 # public entry: backend + shard-local dispatch
 # ---------------------------------------------------------------------------
 
-def _local(q, pool_k, pool_v, pages, lens, win, *, scale, cap, G, backend):
+def _local(q, pool_k, pool_v, pages, lens, win, *, scale, cap, G, backend,
+           scale_k=None, scale_v=None):
     if backend == "blocked":
         return _paged_attn_blocked(q, pool_k, pool_v, pages, lens, win,
-                                   scale=scale, cap=cap, G=G)
+                                   scale=scale, cap=cap, G=G,
+                                   scale_k=scale_k, scale_v=scale_v)
     interpret = (backend == "pallas_interpret"
                  or jax.default_backend() != "tpu")
     return paged_attn_pallas(q, pool_k, pool_v, pages, lens, win,
-                             scale=scale, cap=cap, G=G, interpret=interpret)
+                             scale=scale, cap=cap, G=G, interpret=interpret,
+                             scale_k=scale_k, scale_v=scale_v)
 
 
 def paged_attn(q, pool_k, pool_v, pages, lens, *, scale: float,
                window=None, cap=None, kv_of_q=None,
-               backend: str = "auto") -> jnp.ndarray:
+               backend: str = "auto",
+               scale_k=None, scale_v=None) -> jnp.ndarray:
     """Fused paged-attention step over 1..k query tokens per slot.
 
     q (B, Sq, Hq, D) · pool_k/v (n_pages, ps, Hkv, D) · pages (B, P) ·
@@ -283,11 +331,17 @@ def paged_attn(q, pool_k, pool_v, pages, lens, *, scale: float,
     resolve −1 to a huge window).  Sq is static: each distinct value
     compiles its own kernel (the engine uses exactly two).
 
+    Quantized pools (``cfg.kv_cache_dtype`` int8/int4 — detected from the
+    pool dtype) require ``scale_k``/``scale_v`` ``(n_pages, ps, Hkv)`` f32
+    per-token per-head rows; both lowerings dequantize per page block
+    inside the loop (DESIGN.md §11), keeping the f32 softmax/accumulation
+    op order unchanged.
+
     With an active mesh whose kv-head count divides the model axis, the
     chosen backend runs shard-local per kv-head shard (q/pools/output
-    head-sharded, page table and lens replicated) — attention never mixes
-    kv heads, so the fused path composes with ``--mesh`` serving without
-    collectives.
+    head-sharded — scale rows shard on their kv-head axis too — page
+    table and lens replicated) — attention never mixes kv heads, so the
+    fused path composes with ``--mesh`` serving without collectives.
     """
     B, S, Hq, D = q.shape
     Hkv = pool_k.shape[2]
@@ -300,6 +354,9 @@ def paged_attn(q, pool_k, pool_v, pages, lens, *, scale: float,
                          "expected auto | pallas | pallas_interpret | "
                          "blocked (or attention_backend 'xla' for the "
                          "gather path)")
+    if (kv_mode_of(pool_k) != "bf16") != (scale_k is not None):
+        raise ValueError("quantized pools need scale_k/scale_v rows "
+                         "(and dense pools must not pass them)")
     if backend == "auto":
         backend = "pallas" if jax.default_backend() == "tpu" else "blocked"
     win = _NO_WINDOW if window is None else window
@@ -311,13 +368,19 @@ def paged_attn(q, pool_k, pool_v, pages, lens, *, scale: float,
         tp = mesh.shape[AXIS_MODEL]
         if tp > 1 and Hkv % tp == 0:
             ax = AXIS_MODEL
+            specs = [P(None, None, ax, None), P(None, None, ax, None),
+                     P(None, None, ax, None), P(None, None), P(None), P()]
+            args = [q, pool_k, pool_v, pages, lens, win]
+            if scale_k is not None:
+                specs += [P(None, None, ax), P(None, None, ax)]
+                args += [scale_k, scale_v]
 
-            def shard(ql, kl, vl, pg, ln, w):
-                return _local(ql, kl, vl, pg, ln, w, **kw)
+            def shard(ql, kl, vl, pg, ln, w, *sc):
+                sk, sv = sc if sc else (None, None)
+                return _local(ql, kl, vl, pg, ln, w, scale_k=sk,
+                              scale_v=sv, **kw)
 
-            return shard_map_norep(
-                shard, mesh,
-                (P(None, None, ax, None), P(None, None, ax, None),
-                 P(None, None, ax, None), P(None, None), P(None), P()),
-                P(None, None, ax, None))(q, pool_k, pool_v, pages, lens, win)
-    return _local(q, pool_k, pool_v, pages, lens, win, **kw)
+            return shard_map_norep(shard, mesh, tuple(specs),
+                                   P(None, None, ax, None))(*args)
+    return _local(q, pool_k, pool_v, pages, lens, win, scale_k=scale_k,
+                  scale_v=scale_v, **kw)

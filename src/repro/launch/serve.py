@@ -108,6 +108,15 @@ def main():
                          "through the page table with per-row lens "
                          "early-exit (Mosaic on TPU, the blocked XLA "
                          "lowering of the same algorithm elsewhere)")
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "int8", "int4"],
+                    help="paged KV-cache storage (DESIGN.md §11): 'bf16' "
+                         "= dense pages in the compute dtype; 'int8'/"
+                         "'int4' store pages quantized with per-token "
+                         "per-head scale rows in side pools and "
+                         "dequantize inside the paged-attention page "
+                         "loop — 2-4x fewer pool bytes per token, so "
+                         "more slots / longer contexts at equal HBM")
     # speculative decoding (DESIGN.md §10) — continuous engine only
     ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
                     help="speculative decoding: draft K tokens per slot "
@@ -180,6 +189,12 @@ def main():
         cfg = dataclasses.replace(cfg, mac=MacConfig(mode="int8"))
     if args.paged_attn != "xla":
         cfg = dataclasses.replace(cfg, attention_backend=args.paged_attn)
+    if args.kv_dtype != "bf16":
+        if not args.continuous:
+            ap.error("--kv-dtype quantizes the PAGED cache; it requires "
+                     "--continuous (the static engine's dense cache is "
+                     "unaffected)")
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=args.kv_dtype)
     params = init_model(jax.random.PRNGKey(0), cfg)
 
     params_ref, cfg_ref = params, cfg   # dense reference for --drift-every
@@ -255,6 +270,9 @@ def main():
               f"evictions={st['evictions']} "
               f"p50={st['latency_p50_s']:.3f}s p99={st['latency_p99_s']:.3f}s "
               f"kv_pool={st['kv_pool_bytes'] / 1e6:.1f}MB")
+        print(f"  kv: dtype={st['kv_cache_dtype']} "
+              f"{st['kv_bytes_per_token']:.1f} B/token, "
+              f"capacity={st['kv_capacity_tokens']} tokens")
         if args.prefix_cache:
             print(f"  prefix: hit_rate={st['prefix_hit_rate']:.2f} "
                   f"({st['prefix_hit_tokens']}/{st['prefix_lookup_tokens']} "

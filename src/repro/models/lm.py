@@ -437,19 +437,32 @@ def init_paged_cache(cfg, n_pages: int, page_size: int):
 
     Sequences address the pool through (pages, lens) passed alongside the
     cache at apply time (see repro.nn.paged); page 0 is the scratch page.
-    Allocation lives host-side in repro.serve.paged_cache."""
+    Allocation lives host-side in repro.serve.paged_cache.
+
+    With ``cfg.kv_cache_dtype`` 'int8'/'int4' the pools store quantized
+    pages (int4 packs two head dims per byte) plus f32 per-token
+    per-kv-head ``scale_k/scale_v`` side pools (DESIGN.md §11)."""
     if not supports_paged_cache(cfg):
         raise ValueError(
             f"paged KV cache unsupported for arch {cfg.arch!r} "
             f"(family={cfg.family}, mla={cfg.use_mla}, "
             f"meta_tokens={cfg.meta_tokens}); use the dense init_cache")
-    hd = cfg.head_dim_r
+    from repro.quant.kvcache import kv_pool_layout
+    pdt, phd, quant = kv_pool_layout(cfg)
     layers = {}
     for name, kind, n in _stages(cfg):
-        layers[name] = {
-            "pool_k": jnp.zeros((n, n_pages, page_size, cfg.n_kv_p, hd),
-                                cfg.cdtype),
-            "pool_v": jnp.zeros((n, n_pages, page_size, cfg.n_kv_p, hd),
-                                cfg.cdtype),
+        st = {
+            "pool_k": jnp.zeros((n, n_pages, page_size, cfg.n_kv_p, phd),
+                                pdt),
+            "pool_v": jnp.zeros((n, n_pages, page_size, cfg.n_kv_p, phd),
+                                pdt),
         }
+        if quant:
+            # per-token per-kv-head scale rows (DESIGN.md §11); page axis
+            # at position 1 like the pools so copy_page COW carries them
+            st["scale_k"] = jnp.zeros((n, n_pages, page_size, cfg.n_kv_p),
+                                      jnp.float32)
+            st["scale_v"] = jnp.zeros((n, n_pages, page_size, cfg.n_kv_p),
+                                      jnp.float32)
+        layers[name] = st
     return {"layers": layers}

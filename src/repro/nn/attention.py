@@ -29,7 +29,8 @@ from repro.parallel.sharding import constrain, AXIS_BATCH, AXIS_MODEL
 from .common import linear, linear_init, apply_rope, softcap, norm_init, \
     norm_apply
 from .attention_mha import mha, NEG_INF, _mask  # grouped-layout core op
-from .paged import scatter_kv, gather_kv, paged_attn_decode
+from .paged import (scatter_kv, scatter_kv_quant, gather_kv,
+                    gather_kv_dequant, paged_attn_decode)
 from repro.kernels.paged_attention import paged_attn, gqa_group
 
 
@@ -134,9 +135,23 @@ def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
         # kernel when ``cfg.attention_backend != 'xla'`` (DESIGN.md §8) —
         # work scales with each row's cached tokens instead of the table
         # width; everything else keeps the gathered-view reference path.
+        # Quantized pools (cfg.kv_cache_dtype int8/int4, DESIGN.md §11)
+        # carry scale_k/scale_v side pools in the cache dict: fresh K/V
+        # quantizes on scatter (deterministically — the spec-decode
+        # verify overwrite reproduces non-spec bytes exactly), the fused
+        # kernels dequantize per page block in-loop, and the gather
+        # reference dequantizes its page view.
         pages, lens = cache["pages"], cache["lens"]
-        pk = scatter_kv(cache["pool_k"], pages, positions, k)
-        pv = scatter_kv(cache["pool_v"], pages, positions, v)
+        quant = "scale_k" in cache
+        if quant:
+            pk, sk = scatter_kv_quant(cache["pool_k"], cache["scale_k"],
+                                      pages, positions, k)
+            pv, sv = scatter_kv_quant(cache["pool_v"], cache["scale_v"],
+                                      pages, positions, v)
+        else:
+            sk = sv = None
+            pk = scatter_kv(cache["pool_k"], pages, positions, k)
+            pv = scatter_kv(cache["pool_v"], pages, positions, v)
         # ``paged_fused_max_sq`` (default 1) widens the fused gate for the
         # speculative-decoding verify step: the kernel scores Sq query
         # rows at positions lens..lens+Sq-1, which is exactly this
@@ -150,9 +165,14 @@ def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
                        else cfg.attention_backend)
             out = paged_attn(q, pk, pv, pages, lens, scale=scale,
                              window=window, cap=cfg.attn_softcap,
-                             kv_of_q=kv_map, backend=backend)
+                             kv_of_q=kv_map, backend=backend,
+                             scale_k=sk, scale_v=sv)
         else:
-            ck, cv = gather_kv(pk, pages), gather_kv(pv, pages)
+            if quant:
+                ck = gather_kv_dequant(pk, sk, pages)
+                cv = gather_kv_dequant(pv, sv, pages)
+            else:
+                ck, cv = gather_kv(pk, pages), gather_kv(pv, pages)
             k_pos = jnp.arange(ck.shape[1])
             k_valid = k_pos[None, :] < (lens + S)[:, None]
             out = paged_attn_decode(q, ck, cv, kv_map, scale=scale,
@@ -160,6 +180,8 @@ def attn_apply(p: dict, x: jnp.ndarray, cfg, *, layer_window=None,
                                     k_valid=k_valid, window=window,
                                     cap=cfg.attn_softcap)
         new_cache = {"pool_k": pk, "pool_v": pv}
+        if quant:
+            new_cache.update(scale_k=sk, scale_v=sv)
     else:
         ck, cv, pos = cache["k"], cache["v"], cache["pos"]
         # write new k/v at [pos : pos+S) (decode S=1; prefill S=prompt)

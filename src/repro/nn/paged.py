@@ -36,23 +36,42 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.paged_attention import gqa_group
+from repro.quant.kvcache import dequantize_kv, kv_mode_of, quantize_kv
 from .common import softcap
 from .attention_mha import NEG_INF
+
+
+def _page_slots(pages: jnp.ndarray, positions: jnp.ndarray, ps: int):
+    """(page id, in-page offset) per (B, S) position.  Positions past
+    the table width and positions in unassigned entries both resolve to
+    the scratch page (0) — never a real page, whose offsets may hold
+    live tokens."""
+    P = pages.shape[1]
+    pi = positions // ps                                  # (B, S) table idx
+    pid = jnp.take_along_axis(pages, jnp.minimum(pi, P - 1), axis=1)
+    pid = jnp.where(pi < P, pid, 0)                       # oob → scratch
+    return pid, positions % ps
 
 
 def scatter_kv(pool: jnp.ndarray, pages: jnp.ndarray,
                positions: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
     """Write ``val`` (B, S, H, D) at absolute ``positions`` (B, S) through
-    the page table.  Positions past the table width and positions in
-    unassigned entries both land in the scratch page (0) — never in a
-    real page, whose offsets may hold live tokens."""
-    ps = pool.shape[1]
-    P = pages.shape[1]
-    pi = positions // ps                                  # (B, S) table idx
-    pid = jnp.take_along_axis(pages, jnp.minimum(pi, P - 1), axis=1)
-    pid = jnp.where(pi < P, pid, 0)                       # oob → scratch
-    off = positions % ps
+    the page table (scratch-page routing per ``_page_slots``)."""
+    pid, off = _page_slots(pages, positions, pool.shape[1])
     return pool.at[pid, off].set(val.astype(pool.dtype))
+
+
+def scatter_kv_quant(pool: jnp.ndarray, scale: jnp.ndarray,
+                     pages: jnp.ndarray, positions: jnp.ndarray,
+                     val: jnp.ndarray):
+    """Quantize-on-scatter (DESIGN.md §11): quantize fresh rows ``val``
+    (B, S, H, D) to the pool's storage mode and write value bytes + f32
+    per-token per-head scales through the page table in one pass.
+    Returns ``(pool, scale)`` updated."""
+    mode = kv_mode_of(pool)
+    q, s = quantize_kv(val, mode)
+    pid, off = _page_slots(pages, positions, pool.shape[1])
+    return pool.at[pid, off].set(q), scale.at[pid, off].set(s)
 
 
 def gather_kv(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
@@ -60,6 +79,19 @@ def gather_kv(pool: jnp.ndarray, pages: jnp.ndarray) -> jnp.ndarray:
     B, P = pages.shape
     ps = pool.shape[1]
     return pool[pages].reshape(B, P * ps, *pool.shape[2:])
+
+
+def gather_kv_dequant(pool: jnp.ndarray, scale: jnp.ndarray,
+                      pages: jnp.ndarray) -> jnp.ndarray:
+    """Quantized-pool gather for the reference path: (n_pages, ps, H,
+    Dp) pool + (n_pages, ps, H) scales + (B, P) table → dequantized f32
+    (B, P·ps, H, D) view.  The fused kernels dequantize per page block
+    instead and never build this view."""
+    mode = kv_mode_of(pool)
+    B, P = pages.shape
+    ps = pool.shape[1]
+    out = dequantize_kv(pool[pages], scale[pages], mode)
+    return out.reshape(B, P * ps, *out.shape[3:])
 
 
 def paged_attn_decode(q, k, v, kv_of_q: np.ndarray, *, scale: float,

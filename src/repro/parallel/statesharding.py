@@ -94,6 +94,10 @@ _CACHE_RULES = {
     # kv-head count does not divide the axis)
     "pool_k": (None, None, None, AXIS_MODEL, None),
     "pool_v": (None, None, None, AXIS_MODEL, None),
+    # quantized-pool scale rows (L, n_pages, page_size, n_kv): kv-head
+    # axis sharded like the pools' head axis (DESIGN.md §11)
+    "scale_k": (None, None, None, AXIS_MODEL),
+    "scale_v": (None, None, None, AXIS_MODEL),
 }
 
 

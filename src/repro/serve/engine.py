@@ -366,6 +366,18 @@ class Engine:
         self._g_hit_win = reg.gauge(
             "prefix_windowed_hit_rate",
             "prefix-cache hit rate over recent admissions")
+        # quantized-pool capacity gauges (DESIGN.md §11): bytes/token is
+        # a property of the pool layout, capacity of the page budget —
+        # both constant per engine, published so dashboards can compare
+        # kv-dtype deployments at a glance
+        self._g_kv_bpt = reg.gauge(
+            "kv_bytes_per_token",
+            "pool bytes per cached token across layers (values + scales)")
+        self._g_kv_cap = reg.gauge(
+            "kv_capacity_tokens",
+            "token capacity of the allocatable page pool")
+        self._g_kv_bpt.set(self.kv.kv_bytes_per_token())
+        self._g_kv_cap.set((self.kv.n_pages - 1) * self.kv.page_size)
         # speculative decoding (DESIGN.md §10)
         self._c_spec_rounds = reg.counter(
             "spec_rounds", "speculative draft+verify rounds")
@@ -880,6 +892,9 @@ class Engine:
             "pages_cached": al.n_cached,
             "pages_held": al.n_held,
             "kv_pool_bytes": self.kv.mem_bytes(),
+            "kv_bytes_per_token": self.kv.kv_bytes_per_token(),
+            "kv_capacity_tokens": (self.kv.n_pages - 1) * self.kv.page_size,
+            "kv_cache_dtype": self.cfg.kv_cache_dtype,
             "page_size": self.kv.page_size,
             "n_pages": self.kv.n_pages,
             "n_slots": self.kv.n_slots,

@@ -321,10 +321,13 @@ class PagedKVCache:
 
     def copy_page(self, src: int, dst: int) -> None:
         """Copy-on-write support: duplicate one pool page on device (every
-        layer stage, k and v).  Rare — only taken when a write would land
-        in a page shared with another sequence.  Runs jitted with the pool
-        buffers donated, so the copy is in-place (no full-pool
-        reallocation; the COW test asserts pointer stability)."""
+        layer stage, k and v — and, for quantized pools, the per-page
+        scale rows, which sit in the same layers tree with the page axis
+        at position 1 so the tree_map covers them).  Rare — only taken
+        when a write would land in a page shared with another sequence.
+        Runs jitted with the pool buffers donated, so the copy is
+        in-place (no full-pool reallocation; the COW test asserts
+        pointer stability and scale carry)."""
         self.layers = _copy_page_jit(self.layers, jnp.int32(src),
                                      jnp.int32(dst))
 
@@ -335,9 +338,25 @@ class PagedKVCache:
         return jnp.asarray(self.lens)
 
     def mem_bytes(self) -> int:
-        """Total pool bytes across stages (k+v)."""
-        total = 0
+        """Total cache bytes: every pool leaf across stages (k+v value
+        pools AND the quantized modes' scale side pools) plus the host
+        page-table/lens buffers mirrored to device each step."""
+        total = self.ptab.nbytes + self.lens.nbytes
         for st in self.layers.values():
             for a in st.values():
                 total += a.size * a.dtype.itemsize
         return total
+
+    def pool_bytes(self) -> int:
+        """Device pool bytes only (value + scale pools) — the HBM the
+        page budget actually occupies."""
+        return sum(a.size * a.dtype.itemsize
+                   for st in self.layers.values() for a in st.values())
+
+    def kv_bytes_per_token(self) -> float:
+        """Pool bytes a single cached token costs across all layer
+        stages — value bytes plus (for int8/int4) its f32 scale rows.
+        Every pool leaf is (L, n_pages, page_size, ...), so this is just
+        the pool total over the token capacity.  The 4x/~7x drop under
+        int8/int4 is the ``kv_bytes_per_token`` gauge (DESIGN.md §11)."""
+        return self.pool_bytes() / (self.n_pages * self.page_size)

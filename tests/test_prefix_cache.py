@@ -119,6 +119,36 @@ def test_kv_copy_page_cow(qwen):
             assert float(np.asarray(a[:, 3]).sum()) == 0.0  # others untouched
 
 
+def test_kv_copy_page_cow_quant_carries_scales(qwen):
+    """COW over a quantized cache (DESIGN.md §11): copy_page must
+    duplicate the int8 value rows AND the matching f32 scale rows in the
+    same donated-buffer pass — a copied page that kept stale scales would
+    dequantize to wrong K/V after the fork."""
+    import dataclasses
+    cfg, _ = qwen
+    c = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    kv = PagedKVCache(c, n_slots=1, n_pages=8, page_size=4,
+                      max_seq_pages=4)
+    names = {k for st in kv.layers.values() for k in st}
+    assert {"pool_k", "pool_v", "scale_k", "scale_v"} <= names
+    kv.layers = jax.tree_util.tree_map(
+        lambda a: a.at[:, 1].set(3 if a.dtype == jnp.int8 else 3.0),
+        kv.layers)
+    kv.copy_page(0, 3)          # warm the jitted copy (first call may alloc)
+    ptrs = [a.unsafe_buffer_pointer()
+            for st in kv.layers.values() for a in st.values()]
+    kv.copy_page(1, 2)
+    # COW is in-place across ALL leaves, scale pools included
+    assert [a.unsafe_buffer_pointer()
+            for st in kv.layers.values() for a in st.values()] == ptrs
+    for st in kv.layers.values():
+        for a in st.values():
+            np.testing.assert_array_equal(np.asarray(a[:, 2]),
+                                          np.asarray(a[:, 1]))
+            assert float(np.abs(np.asarray(a[:, 3])
+                                .astype(np.float32)).sum()) == 0.0
+
+
 # ---------------------------------------------------------------------------
 # prefix index
 # ---------------------------------------------------------------------------
