@@ -1,0 +1,98 @@
+"""Static-analysis runner: lint + kernel bounds + sharding coverage.
+
+One entry point for everything under ``src/repro/analysis`` (DESIGN.md
+§12).  Findings print one per line as ``file:line: [rule] message`` and
+(with ``--json``) land in a structured report; any finding exits 1, so
+the CI ``static-analysis`` job is a plain invocation.
+
+    python scripts/analyze.py --lint --kernels --sharding
+    python scripts/analyze.py --self-test        # seeded-mutation escapes
+    python scripts/analyze.py --json ANALYSIS_report.json
+
+With no selection flags, all three checkers run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--lint", action="store_true",
+                    help="AST lint rules over src/repro")
+    ap.add_argument("--kernels", action="store_true",
+                    help="Pallas/XLA kernel bounds checker")
+    ap.add_argument("--sharding", action="store_true",
+                    help="sharding-coverage checker")
+    ap.add_argument("--self-test", action="store_true",
+                    help="seeded-mutation escape check (each planted bug "
+                         "must be caught)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the structured report here")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the registered lint-rule catalog and exit")
+    args = ap.parse_args()
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    if args.rules:
+        from repro.analysis.lint import registered_rules
+        for r in registered_rules().values():
+            tok = f" (allow: {r.allow})" if r.allow else ""
+            print(f"{r.id}{tok}: {r.doc}")
+        return 0
+
+    run_all = not (args.lint or args.kernels or args.sharding
+                   or args.self_test)
+    report = {"findings": [], "coverage": {}, "selftest": []}
+    findings = []
+
+    if args.lint or run_all:
+        from repro.analysis.lint import run_lint
+        f = run_lint(root=REPO)
+        findings.extend(f)
+        report["coverage"]["lint"] = {"findings": len(f)}
+    if args.kernels or run_all:
+        from repro.analysis.kernelcheck import run_kernelcheck
+        f, cov = run_kernelcheck()
+        findings.extend(f)
+        report["coverage"]["kernels"] = cov
+    if args.sharding or run_all:
+        from repro.analysis.shardcheck import run_shardcheck
+        f, cov = run_shardcheck()
+        findings.extend(f)
+        report["coverage"]["sharding"] = cov
+
+    escapes = []
+    if args.self_test:
+        from repro.analysis.selftest import run_selftest
+        report["selftest"] = run_selftest()
+        escapes = [r for r in report["selftest"] if not r["caught"]]
+        for r in report["selftest"]:
+            tag = "caught" if r["caught"] else "ESCAPE"
+            err = f"  ({r['error']})" if r.get("error") else ""
+            print(f"selftest {tag:6s} {r['case']}{err}")
+
+    report["findings"] = [f.to_json() for f in findings]
+    for f in findings:
+        print(f)
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fp:
+            json.dump(report, fp, indent=2, sort_keys=True)
+        print(f"report -> {args.json}")
+
+    n = len(findings)
+    print(f"analyze: {n} finding(s)"
+          + (f", {len(escapes)} self-test escape(s)" if args.self_test
+             else ""))
+    return 1 if (n or escapes) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

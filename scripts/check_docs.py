@@ -74,16 +74,63 @@ def check_design_refs(errors: list) -> None:
                               f"{sorted(sections, key=int)})")
 
 
+RULE_REG_RE = re.compile(r"^@rule\(\s*['\"]([a-z0-9-]+)['\"]",
+                         re.MULTILINE)
+RULE_CONST_RE = re.compile(r"^RULE(?:_ID)?\s*=\s*['\"]([a-z0-9-]+)['\"]",
+                           re.MULTILINE)
+CATALOG_ID_RE = re.compile(r"`([a-z][a-z0-9-]+)`")
+
+
+def check_rule_catalog(errors: list) -> None:
+    """docs/analysis.md's rule-catalog table and the analysis package
+    must name exactly the same finding kinds: every ``@rule(...)``
+    registration plus the checkers' ``RULE`` constants plus the
+    framework's blanket-suppression finding."""
+    registered = set()
+    analysis = os.path.join(REPO, "src", "repro", "analysis")
+    for root, _, files in os.walk(analysis):
+        for fn in files:
+            if not fn.endswith(".py"):
+                continue
+            with open(os.path.join(root, fn), encoding="utf-8") as f:
+                text = f.read()
+            registered |= set(RULE_REG_RE.findall(text))
+            registered |= set(RULE_CONST_RE.findall(text))
+            if '"blanket-suppression"' in text:
+                registered.add("blanket-suppression")
+    doc = os.path.join(REPO, "docs", "analysis.md")
+    if not os.path.exists(doc):
+        errors.append("docs/analysis.md does not exist but "
+                      "src/repro/analysis registers rules")
+        return
+    documented = set()
+    with open(doc, encoding="utf-8") as f:
+        for line in f:
+            if not line.lstrip().startswith("|") or line.count("|") < 2:
+                continue
+            first_cell = line.split("|")[1]
+            documented |= set(CATALOG_ID_RE.findall(first_cell))
+    documented -= {"rule"}                       # table header
+    for rid in sorted(registered - documented):
+        errors.append(f"analysis rule '{rid}' is registered but missing "
+                      "from the docs/analysis.md rule catalog")
+    for rid in sorted(documented - registered):
+        errors.append(f"docs/analysis.md catalogs rule '{rid}' but "
+                      "nothing in src/repro/analysis registers it")
+
+
 def main() -> int:
     errors: list = []
     check_md_links(errors)
     check_design_refs(errors)
+    check_rule_catalog(errors)
     if errors:
         print(f"docs check FAILED ({len(errors)} problem(s)):")
         for e in errors:
             print(f"  {e}")
         return 1
-    print("docs check OK (links + DESIGN.md § references)")
+    print("docs check OK (links + DESIGN.md § references + analysis "
+          "rule catalog)")
     return 0
 
 

@@ -1,0 +1,24 @@
+"""Static analysis & sanitizers for the serving stack (DESIGN.md §12).
+
+Four parts, one CLI (``scripts/analyze.py``):
+
+  * ``lint``        — repo-specific AST rules over ``src/repro``
+                      (host-sync-in-hot-path, jit-in-loop, f32-accum,
+                      metric-docs-sync);
+  * ``kernelcheck`` — evaluates every Pallas BlockSpec index map over the
+                      full grid × boundary ``lens`` against pool shapes;
+  * ``shardcheck``  — ``eval_shape``s every registry arch and proves the
+                      sharding rules cover every param/pool leaf;
+  * ``ledger``      — the runtime sibling: an opt-in shadow page ledger
+                      (``REPRO_SANITIZE=1`` / ``Engine(sanitize=True)``)
+                      validating every allocator transition.
+
+Only the ledger is exported here: the static checkers import large chunks
+of the repo (and lint imports nothing of it), so ``analyze.py`` pulls them
+in directly — keeping ``repro.serve.paged_cache → repro.analysis`` free of
+import cycles.
+"""
+from .ledger import (LedgerError, PageLedger, attach_ledger,
+                     sanitize_enabled)
+
+__all__ = ["LedgerError", "PageLedger", "attach_ledger", "sanitize_enabled"]

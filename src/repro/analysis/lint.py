@@ -1,0 +1,235 @@
+"""Custom AST lint framework over ``src/repro`` (DESIGN.md §12).
+
+Rules are plain functions registered with ``@rule("id", doc)`` in
+``analysis/rules/``; each receives a parsed :class:`Repo` and yields
+:class:`Finding`s.  A finding at line L is suppressed by an annotation on
+line L or L-1::
+
+    # analysis: allow(<rule-id>): <one-line reason>
+
+The reason is REQUIRED — a bare ``allow(...)`` (or one with an empty
+reason) does not suppress anything and is itself reported as a
+``blanket-suppression`` finding, so every waiver in the tree is
+individually justified.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Callable, Dict, Iterable, List, Optional, Set
+
+SUPPRESS_RE = re.compile(
+    r"#\s*analysis:\s*allow\(([a-z0-9-]+)\)\s*:\s*(\S.*)$")
+BLANKET_RE = re.compile(r"#\s*analysis:\s*allow\(([a-z0-9-]*)\)\s*(:?\s*)$")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One analysis result, addressable as ``file:line``."""
+    rule: str
+    file: str                       # repo-relative path
+    line: int
+    message: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass
+class Module:
+    """A parsed source module."""
+    rel: str                        # repo-relative path
+    name: str                       # import name, e.g. "repro.serve.engine"
+    source: str
+    lines: List[str]
+    tree: ast.Module
+
+
+class Repo:
+    """Parsed view of a python source tree (one parse per module)."""
+
+    def __init__(self, root: str, src_rel: str = "src/repro",
+                 pkg_prefix: str = "repro"):
+        self.root = root
+        self.src_rel = src_rel
+        self.modules: Dict[str, Module] = {}        # by import name
+        self.by_rel: Dict[str, Module] = {}
+        src = os.path.join(root, src_rel)
+        for dirpath, dirnames, filenames in os.walk(src):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if not d.startswith((".", "__pycache__")))
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, root)
+                sub = os.path.relpath(path, src)
+                parts = [p for p in sub[:-3].split(os.sep) if p]
+                if parts and parts[-1] == "__init__":
+                    parts = parts[:-1]
+                name = ".".join([pkg_prefix] + parts) if pkg_prefix else \
+                    ".".join(parts)
+                with open(path, encoding="utf-8") as f:
+                    source = f.read()
+                mod = Module(rel=rel, name=name, source=source,
+                             lines=source.splitlines(),
+                             tree=ast.parse(source, filename=rel))
+                self.modules[name] = mod
+                self.by_rel[rel] = mod
+
+    def suppressions(self, mod: Module) -> Dict[int, Set[str]]:
+        """Map of covered source line → suppressed rule ids.  A same-line
+        annotation covers its own line; a comment-line annotation covers
+        the next code line (blank lines and the rest of a multi-line
+        comment block in between are skipped)."""
+        out: Dict[int, Set[str]] = {}
+        n = len(mod.lines)
+        for i, text in enumerate(mod.lines, start=1):
+            m = SUPPRESS_RE.search(text)
+            if not m:
+                continue
+            covered = {i}
+            if text.lstrip().startswith("#"):
+                j = i + 1
+                while j <= n and (not mod.lines[j - 1].strip()
+                                  or mod.lines[j - 1].lstrip()
+                                  .startswith("#")):
+                    j += 1
+                if j <= n:
+                    covered.add(j)
+            for ln in covered:
+                out.setdefault(ln, set()).add(m.group(1))
+        return out
+
+    def blanket_suppressions(self, mod: Module) -> List[Finding]:
+        """Annotations with no (or an empty) reason — never honored."""
+        out = []
+        for i, text in enumerate(mod.lines, start=1):
+            if BLANKET_RE.search(text):
+                out.append(Finding(
+                    "blanket-suppression", mod.rel, i,
+                    "allow(...) without a reason — every suppression "
+                    "must carry a one-line rationale"))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# rule registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Rule:
+    id: str
+    doc: str
+    fn: Callable[[Repo], Iterable[Finding]]
+    allow: Optional[str] = None     # short annotation token, if not the id
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, doc: str, allow: Optional[str] = None):
+    """Register a lint rule: ``fn(repo) -> iterable of Finding``.
+
+    ``allow`` names a short suppression token (``allow(host-sync)`` for
+    ``host-sync-in-hot-path``) when the full id would be unwieldy in
+    annotations; the id itself always works too."""
+    def deco(fn):
+        _RULES[rule_id] = Rule(rule_id, doc, fn, allow)
+        return fn
+    return deco
+
+
+def registered_rules() -> Dict[str, Rule]:
+    from repro.analysis import rules as _  # noqa: F401  (registers)
+    return dict(_RULES)
+
+
+def run_lint(repo: Optional[Repo] = None,
+             root: Optional[str] = None) -> List[Finding]:
+    """Run every registered rule; drop annotated findings, keep the rest,
+    and report blanket (reason-less) suppressions as findings."""
+    if repo is None:
+        repo = Repo(root or repo_root())
+    rules = registered_rules()
+    findings: List[Finding] = []
+    for r in rules.values():
+        findings.extend(r.fn(repo))
+    out: List[Finding] = []
+    sup_cache: Dict[str, Dict[int, Set[str]]] = {}
+    for f in findings:
+        mod = repo.by_rel.get(f.file)
+        if mod is not None:
+            if f.file not in sup_cache:
+                sup_cache[f.file] = repo.suppressions(mod)
+            tokens = {f.rule}
+            r = rules.get(f.rule)
+            if r is not None and r.allow:
+                tokens.add(r.allow)
+            if tokens & sup_cache[f.file].get(f.line, set()):
+                continue
+        out.append(f)
+    for mod in repo.modules.values():
+        out.extend(repo.blanket_suppressions(mod))
+    return sorted(out, key=lambda f: (f.file, f.line, f.rule))
+
+
+def repo_root() -> str:
+    """Repository root: this file lives at src/repro/analysis/lint.py."""
+    here = os.path.abspath(__file__)
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(here))))
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers for the rules
+# ---------------------------------------------------------------------------
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """Dotted name of a call target when statically resolvable:
+    ``np.asarray`` → "np.asarray", ``f()`` → "f", ``x.item()`` → ".item"
+    (leading dot = attribute on a non-Name receiver)."""
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        if isinstance(fn.value, ast.Name):
+            return f"{fn.value.id}.{fn.attr}"
+        return f".{fn.attr}"
+    return None
+
+
+def from_imports(tree: ast.Module, mod_name: str) -> Dict[str, tuple]:
+    """``from X import a as b`` → {"b": ("X", "a")} with relative imports
+    resolved against ``mod_name``'s package."""
+    out: Dict[str, tuple] = {}
+    pkg = mod_name.split(".")
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ImportFrom):
+            continue
+        if node.level:
+            base = pkg[:len(pkg) - node.level]
+            target = ".".join(base + ([node.module] if node.module else []))
+        else:
+            target = node.module or ""
+        for alias in node.names:
+            out[alias.asname or alias.name] = (target, alias.name)
+    return out
+
+
+def top_level_functions(tree: ast.Module) -> Dict[str, ast.AST]:
+    """Top-level defs plus methods, keyed "fn" / "Class.fn"."""
+    out: Dict[str, ast.AST] = {}
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[node.name] = node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    out[f"{node.name}.{sub.name}"] = sub
+    return out

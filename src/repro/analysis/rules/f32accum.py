@@ -1,0 +1,140 @@
+"""Rule ``f32-accum``: every Pallas kernel must accumulate in f32.
+
+The repro's numerics contract (token-identity across MAC backends, dense
+vs paged parity) hangs on f32 accumulation: bf16 inputs are fine, but the
+MXU contraction must declare ``preferred_element_type`` (f32) or the
+call site must carry f32 VMEM accumulator scratch.  The check walks every
+``pl.pallas_call`` site, resolves the kernel function (direct name or
+``functools.partial(kernel, ...)`` — including a local variable bound to
+such a partial), and requires at least one of:
+
+  * a ``preferred_element_type`` keyword inside the kernel body (the
+    value is often a local alias like ``f32``, so presence is checked,
+    not the literal), or
+  * a ``float32`` VMEM scratch shape at the call site.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+from repro.analysis.lint import Finding, Module, Repo, rule
+
+RULE_ID = "f32-accum"
+
+
+def _enclosing_scopes(tree: ast.Module):
+    """Yield (scope_node, pallas_call_node) for every pallas_call, where
+    scope_node is the innermost enclosing function (or the module)."""
+    def visit(node, scope):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from visit(child, child)
+            else:
+                if isinstance(child, ast.Call) and \
+                        _attr_is(child.func, "pallas_call"):
+                    yield scope, child
+                yield from visit(child, scope)
+    yield from visit(tree, tree)
+
+
+def _attr_is(node: ast.AST, attr: str) -> bool:
+    return isinstance(node, ast.Attribute) and node.attr == attr
+
+
+def _partial_target(call: ast.Call) -> Optional[str]:
+    """``functools.partial(f, ...)`` / ``partial(f, ...)`` → "f"."""
+    fn = call.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else \
+        fn.id if isinstance(fn, ast.Name) else None
+    if name == "partial" and call.args and isinstance(call.args[0],
+                                                     ast.Name):
+        return call.args[0].id
+    return None
+
+
+def _kernel_fn(scope: ast.AST, call: ast.Call,
+               mod_funcs: Dict[str, ast.AST]) -> Optional[ast.AST]:
+    """Resolve a pallas_call's kernel argument to its FunctionDef."""
+    if not call.args:
+        return None
+    arg = call.args[0]
+    name = None
+    if isinstance(arg, ast.Name):
+        name = arg.id
+    elif isinstance(arg, ast.Call):
+        name = _partial_target(arg)
+    if name is None:
+        return None
+    if name in mod_funcs:
+        return mod_funcs[name]
+    # a local variable bound to partial(kernel, ...) in the same scope
+    for sub in ast.walk(scope):
+        if isinstance(sub, ast.Assign) and len(sub.targets) == 1 and \
+                isinstance(sub.targets[0], ast.Name) and \
+                sub.targets[0].id == name and \
+                isinstance(sub.value, ast.Call):
+            tgt = _partial_target(sub.value)
+            if tgt and tgt in mod_funcs:
+                return mod_funcs[tgt]
+    return None
+
+
+def _has_pref_etype(fn: ast.AST) -> bool:
+    for sub in ast.walk(fn):
+        if isinstance(sub, ast.keyword) and \
+                sub.arg == "preferred_element_type":
+            return True
+    return False
+
+
+def _call_has_f32_scratch(call: ast.Call, scope: ast.AST) -> bool:
+    """float32 VMEM scratch in the pallas_call (or its grid_spec, which
+    may be built in the enclosing scope)."""
+    for node in (call, scope):
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.keyword) and \
+                    sub.arg == "scratch_shapes":
+                for leaf in ast.walk(sub.value):
+                    if _attr_is(leaf, "float32") or (
+                            isinstance(leaf, ast.Name)
+                            and leaf.id == "f32"):
+                        return True
+    return False
+
+
+def _module_funcs(mod: Module) -> Dict[str, ast.AST]:
+    out: Dict[str, ast.AST] = {}
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, node)
+    return out
+
+
+@rule(RULE_ID, "Pallas kernels must accumulate in f32: "
+               "preferred_element_type in the kernel body or f32 VMEM "
+               "accumulator scratch at the pallas_call site")
+def check(repo: Repo) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in repo.modules.values():
+        if "pallas" not in mod.source:
+            continue
+        funcs = _module_funcs(mod)
+        for scope, call in _enclosing_scopes(mod.tree):
+            kern = _kernel_fn(scope, call, funcs)
+            if kern is None:
+                out.append(Finding(
+                    RULE_ID, mod.rel, call.lineno,
+                    "pallas_call whose kernel function cannot be "
+                    "statically resolved — keep kernels as module "
+                    "functions (or partials of them)"))
+                continue
+            if _has_pref_etype(kern) or _call_has_f32_scratch(call, scope):
+                continue
+            out.append(Finding(
+                RULE_ID, mod.rel, call.lineno,
+                f"kernel '{getattr(kern, 'name', '?')}' has no "
+                "preferred_element_type and the call site declares no "
+                "f32 accumulator scratch — MXU would accumulate in the "
+                "input dtype"))
+    return out

@@ -1,0 +1,37 @@
+"""Rule ``jit-in-loop``: a ``jax.jit(...)`` call inside a loop body.
+
+``jax.jit`` caches on function identity — wrapping a fresh closure every
+iteration defeats the cache and re-traces/re-compiles per iteration (the
+exact failure mode ``_jitted_paged_steps`` memoizes against).  A jit call
+inside ``for``/``while`` is almost always a bug; hoist it or memoize.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.lint import Finding, Repo, rule
+
+RULE_ID = "jit-in-loop"
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == "jit"
+            and isinstance(node.value, ast.Name) and node.value.id == "jax")
+
+
+@rule(RULE_ID, "jax.jit called inside a for/while loop body (re-traces "
+               "and re-compiles every iteration)")
+def check(repo: Repo) -> List[Finding]:
+    out: List[Finding] = []
+    for mod in repo.modules.values():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, (ast.For, ast.While, ast.AsyncFor)):
+                continue
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) and _is_jax_jit(sub.func):
+                    out.append(Finding(
+                        RULE_ID, mod.rel, sub.lineno,
+                        "jax.jit inside a loop body — hoist it out or "
+                        "memoize on (cfg, mesh) like _jitted_paged_steps"))
+    return out

@@ -1,0 +1,82 @@
+"""Rule ``metric-docs-sync``: the metric tables in
+``docs/observability.md`` and the registrations in the source tree must
+name exactly the same set of metrics.
+
+Registrations are ``registry.counter("name", ...)`` / ``.gauge`` /
+``.histogram`` calls with a literal first argument, anywhere under
+``src/repro``.  Documentation is any backticked ``metric_name`` token
+inside a markdown table row (``| ... |``) of the doc — rows may group
+several names (``` `a`, `b` ``` or ``` `a` / `b` ```).
+
+Both directions are findings: an undocumented registration points at the
+registration line; a documented-but-unregistered name points at the doc
+table row (stale docs mislead dashboards just as much).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List
+
+from repro.analysis.lint import Finding, Repo, rule
+
+RULE_ID = "metric-docs-sync"
+DOC_REL = os.path.join("docs", "observability.md")
+_KINDS = ("counter", "gauge", "histogram")
+_NAME_RE = re.compile(r"`([a-z][a-z0-9_]*)`")
+
+
+def registered_metrics(repo: Repo) -> Dict[str, tuple]:
+    """metric name → (file, line) of its first registration."""
+    out: Dict[str, tuple] = {}
+    for mod in repo.modules.values():
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _KINDS and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)):
+                continue
+            name = node.args[0].value
+            out.setdefault(name, (mod.rel, node.lineno))
+    return out
+
+
+def documented_metrics(repo: Repo) -> Dict[str, tuple]:
+    """metric name → (doc file, line) from the markdown table rows."""
+    path = os.path.join(repo.root, DOC_REL)
+    out: Dict[str, tuple] = {}
+    if not os.path.exists(path):
+        return out
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, start=1):
+            if not line.lstrip().startswith("|"):
+                continue
+            # only the first (name) column: later columns hold prose that
+            # may backtick flags or other identifiers
+            first_cell = line.split("|")[1] if line.count("|") >= 2 else ""
+            for m in _NAME_RE.finditer(first_cell):
+                out.setdefault(m.group(1), (DOC_REL, i))
+    return out
+
+
+@rule(RULE_ID, "every metric registered via repro.obs appears in "
+               "docs/observability.md's tables, and vice versa")
+def check(repo: Repo) -> List[Finding]:
+    reg = registered_metrics(repo)
+    doc = documented_metrics(repo)
+    out: List[Finding] = []
+    for name in sorted(set(reg) - set(doc)):
+        f, ln = reg[name]
+        out.append(Finding(
+            RULE_ID, f, ln,
+            f"metric '{name}' is registered here but has no row in "
+            f"{DOC_REL}"))
+    for name in sorted(set(doc) - set(reg)):
+        f, ln = doc[name]
+        out.append(Finding(
+            RULE_ID, f, ln,
+            f"metric '{name}' is documented here but never registered "
+            "in src/repro"))
+    return out

@@ -24,6 +24,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+# BlockSpec index maps over the (M/bm, N/bn, K/bk) grid — module level so
+# analysis/kernelcheck.py evaluates exactly what the kernel traces.
+
+def x_block_map(i, j, kk):
+    """x_codes (m, k): row block i, K block kk."""
+    return (i, kk)
+
+
+def w_block_map(i, j, kk):
+    """wt (U, k, n): every monomial plane, K block kk, column block j."""
+    return (0, kk, j)
+
+
+def bias_block_map(i, j, kk):
+    """bias (n,): column block j (added once on the last K step)."""
+    return (j,)
+
+
+def out_block_map(i, j, kk):
+    """out (m, n): VMEM-resident across the K loop (revisited block)."""
+    return (i, j)
+
+
 def _kernel(x_ref, w_ref, b_ref, o_ref, *, mono_bits, n_k_blocks):
     k = pl.program_id(2)
 
@@ -72,11 +95,11 @@ def encoded_matmul_pallas(x_codes: jnp.ndarray, wt: jnp.ndarray,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((u, bk, bn), lambda i, j, kk: (0, kk, j)),
-            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bm, bk), x_block_map),
+            pl.BlockSpec((u, bk, bn), w_block_map),
+            pl.BlockSpec((bn,), bias_block_map),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), out_block_map),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(x_codes, wt.astype(jnp.bfloat16), bias.astype(jnp.float32))

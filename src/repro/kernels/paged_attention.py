@@ -96,6 +96,35 @@ def _softcap(s, cap):
 
 
 # ---------------------------------------------------------------------------
+# BlockSpec index maps (module level so analysis/kernelcheck.py can evaluate
+# exactly the functions the kernel traces — not a re-derivation of them).
+# Scalar-prefetch signature: (b, p, pages_s, lens_s, win_s); Sq/ps are bound
+# by functools.partial at call-site.
+# ---------------------------------------------------------------------------
+
+def paged_kv_block_map(b, p, pages_s, lens_s, win_s, *, Sq, ps):
+    """K/V pool block index for grid cell (b, p): the page id holding page
+    block p of row b.  Past-lens blocks clamp to the last needed page —
+    positions <= lens[b] + Sq - 1 — so the index map repeats and no new
+    DMA is issued for blocks the kernel body skips via ``pl.when``."""
+    p_eff = jnp.minimum(p, (lens_s[b] + Sq - 1) // ps)
+    return (pages_s[b, p_eff], 0, 0, 0)
+
+
+def paged_scale_block_map(b, p, pages_s, lens_s, win_s, *, Sq, ps):
+    """Same page clamp for the (n_pages, ps, Hkv) f32 scale side pools of
+    quantized KV modes (DESIGN.md §11) — scale rows stream with their
+    value page."""
+    p_eff = jnp.minimum(p, (lens_s[b] + Sq - 1) // ps)
+    return (pages_s[b, p_eff], 0, 0)
+
+
+def paged_q_block_map(b, p, *_):
+    """q / output block index: row b, whole (Sq, Hq, D) block."""
+    return (b, 0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernel
 # ---------------------------------------------------------------------------
 
@@ -186,20 +215,13 @@ def paged_attn_pallas(q, pool_k, pool_v, pages, lens, window, *,
     n_pb = pages.shape[1]
     win = jnp.asarray(window, jnp.int32).reshape(1)
 
-    def page_idx(b, p, pages_s, lens_s, win_s):
-        # clamp past-lens blocks to the last needed page: the index map
-        # repeats, so no new DMA is issued for skipped blocks
-        p_eff = jnp.minimum(p, (lens_s[b] + S - 1) // ps)
-        return (pages_s[b, p_eff], 0, 0, 0)
-
-    def page_idx3(b, p, pages_s, lens_s, win_s):
-        p_eff = jnp.minimum(p, (lens_s[b] + S - 1) // ps)
-        return (pages_s[b, p_eff], 0, 0)
+    page_idx = functools.partial(paged_kv_block_map, Sq=S, ps=ps)
+    page_idx3 = functools.partial(paged_scale_block_map, Sq=S, ps=ps)
 
     kern = functools.partial(_decode_kernel, ps=ps, n_pb=n_pb, scale=scale,
                              cap=cap, G=G, Sq=S, mode=mode)
     in_specs = [
-        pl.BlockSpec((1, S, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
+        pl.BlockSpec((1, S, Hq, D), paged_q_block_map),
         pl.BlockSpec((1, ps, Hkv, Dp), page_idx),
         pl.BlockSpec((1, ps, Hkv, Dp), page_idx),
     ]
@@ -212,7 +234,7 @@ def paged_attn_pallas(q, pool_k, pool_v, pages, lens, window, *,
         num_scalar_prefetch=3,
         grid=(B, n_pb),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, S, Hq, D), lambda b, p, *_: (b, 0, 0, 0)),
+        out_specs=pl.BlockSpec((1, S, Hq, D), paged_q_block_map),
         scratch_shapes=[
             pltpu.VMEM((Hkv, S * G), jnp.float32),
             pltpu.VMEM((Hkv, S * G), jnp.float32),

@@ -151,7 +151,18 @@ def main():
     ap.add_argument("--calib-batches", type=int, default=4)
     ap.add_argument("--force-calib", action="store_true",
                     help="rebuild the artifact bundle even if cached")
+    ap.add_argument("--debug-nan", action="store_true",
+                    help="raise on the first NaN any dispatch produces "
+                         "(debug-only: forces per-op sync)")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="attach the allocator shadow ledger (validates "
+                         "every page transition + per-step conservation; "
+                         "REPRO_SANITIZE=1 does the same)")
     args = ap.parse_args()
+
+    if args.debug_nan:
+        from repro.launch.env import set_debug_nan
+        set_debug_nan(True)
 
     import numpy as np
     import jax
@@ -256,7 +267,8 @@ def main():
                         prefix_cache=args.prefix_cache,
                         prefill_chunk=args.prefill_chunk,
                         telemetry=tel, spec_decode=args.spec_decode,
-                        draft_params=draft_params, draft_cfg=draft_cfg)
+                        draft_params=draft_params, draft_cfg=draft_cfg,
+                        sanitize=args.sanitize or None)
         t0 = time.time()
         rids = [engine.submit(r, max_new=args.max_new) for r in reqs]
         outs = engine.run()

@@ -43,11 +43,17 @@ def main():
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0,
                     help="fake host devices (0 = real)")
+    ap.add_argument("--debug-nan", action="store_true",
+                    help="raise on the first NaN any dispatch produces "
+                         "(debug-only: forces per-op sync)")
     args = ap.parse_args()
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
+    if args.debug_nan:
+        from repro.launch.env import set_debug_nan
+        set_debug_nan(True)
     # comm/compute overlap (latency-hiding scheduler) — harmless on CPU
     os.environ.setdefault(
         "LIBTPU_INIT_ARGS",

@@ -176,6 +176,10 @@ _RULES: list[tuple[str, tuple]] = [
     (r"embed/table$",        ("model", "fsdp")),
     (r"lm_head/w$",          ("fsdp", "model")),
     (r"mtp/.*head/w$",       ("fsdp", "model")),
+    (r"mtp/proj/w$",         ("fsdp", "model")),  # (2d, d) combiner
+    # read-every-step position table: deliberately replicated — sharding
+    # it would trade 10s of MB/device for an all-gather per added slice
+    (r"pos_table$",          None),
     # attention projections: in-dim × (heads*dim) — shard head dim over model
     (r"(attn|mla)/w(q|k|v|kv|qkv)(_b)?$", ("fsdp", "model")),
     (r"(attn|mla)/w(q_a|kv_a|kr)$",       ("fsdp", None)),   # low-rank down
@@ -199,23 +203,33 @@ _RULES: list[tuple[str, tuple]] = [
 ]
 
 
-def _spec_for_path(path: str, shape: tuple, fsdp: bool) -> P:
+def rule_for_path(path: str):
+    """First matching ``(pattern, items)`` rule for ``path``, or ``None``
+    when NO rule matches.  ``items is None`` means an explicit replicate
+    rule — distinct from no rule at all, which also replicates but is the
+    silent default ``analysis/shardcheck.py`` flags for large leaves."""
     for pat, items in _RULES:
         if re.search(pat, path):
-            if items is None:
-                return P()
-            out = []
-            for i, e in enumerate(items[:len(shape)]):
-                if e == "fsdp":
-                    out.append(AXIS_BATCH if fsdp else None)
-                elif e == "model":
-                    out.append(AXIS_MODEL)
-                else:
-                    out.append(None)
-            # pad missing dims with None
-            out += [None] * (len(shape) - len(out))
-            return P(*out)
-    return P()  # default: replicate
+            return pat, items
+    return None
+
+
+def _spec_for_path(path: str, shape: tuple, fsdp: bool) -> P:
+    rule = rule_for_path(path)
+    if rule is None or rule[1] is None:
+        return P()  # explicit replicate rule, or no-match default
+    items = rule[1]
+    out = []
+    for i, e in enumerate(items[:len(shape)]):
+        if e == "fsdp":
+            out.append(AXIS_BATCH if fsdp else None)
+        elif e == "model":
+            out.append(AXIS_MODEL)
+        else:
+            out.append(None)
+    # pad missing dims with None
+    out += [None] * (len(shape) - len(out))
+    return P(*out)
 
 
 def _path_str(path) -> str:

@@ -37,6 +37,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.ledger import sanitize_enabled
 from repro.core.macexec import check_drafter
 from repro.models import (apply_model, init_cache, init_paged_cache,
                           supports_paged_cache)
@@ -262,7 +263,8 @@ class Engine:
                  reserve: str = "conservative", mesh=None,
                  prefill_chunk: int = 32, prefix_cache: bool = False,
                  telemetry: Optional[ServeTelemetry] = None,
-                 spec_decode: int = 0, draft_params=None, draft_cfg=None):
+                 spec_decode: int = 0, draft_params=None, draft_cfg=None,
+                 sanitize: Optional[bool] = None):
         if not supports_paged_cache(cfg):
             raise ValueError(
                 f"{cfg.arch!r} cannot serve paged; use ServeEngine")
@@ -276,8 +278,12 @@ class Engine:
         if max_seq_pages is None:
             # default: one sequence may hold up to half the pool
             max_seq_pages = max(4, (n_pages - 1) // 2)
+        if sanitize is None:
+            # opt-in shadow page ledger (DESIGN.md §12): env var so test
+            # suites can sanitize every engine without touching call sites
+            sanitize = sanitize_enabled()
         self.kv = PagedKVCache(cfg, n_slots, n_pages, page_size,
-                               max_seq_pages)
+                               max_seq_pages, sanitize=sanitize)
         self.sched = Scheduler(self.kv, reserve=reserve,
                                prefix_cache=prefix_cache,
                                telemetry=self.tel)
@@ -478,6 +484,8 @@ class Engine:
         return self.results()
 
     def results(self) -> dict:
+        # analysis: allow(host-sync): packs host-side int lists, no device
+        # transfer — runs once per drain, not per step
         return {rid: np.asarray(r.out, np.int32)
                 for rid, r in self.requests.items() if r.state == FINISHED}
 
@@ -499,6 +507,10 @@ class Engine:
                 tr.complete("step", t0, t1, tid=TID_ENGINE, cat="engine",
                             args={"step": self._steps})
             self._update_gauges()
+            if self.kv.ledger is not None:
+                # sanitizer: per-step page conservation + shadow/real
+                # cross-check (DESIGN.md §12)
+                self.kv.ledger.verify()
 
     def _update_gauges(self) -> None:
         """Pool / queue / prefix gauges (free–held–cached page split,
@@ -570,6 +582,7 @@ class Engine:
                 # device-time attribution (DESIGN.md §9): block on the
                 # step outputs so [t_d0, t_d1] is dispatch+device time,
                 # separable from the host scheduler time around it
+                # analysis: allow(host-sync): opt-in --time-device sync
                 jax.block_until_ready((toks, self.kv.layers))
                 t_d1 = time.perf_counter()
                 self._h_dev_decode.observe((t_d1 - t_d0) * 1e3,
@@ -578,6 +591,8 @@ class Engine:
                     tr.complete("device:decode", t_d0, t_d1,
                                 tid=TID_DEVICE, cat="device",
                                 args={"n_active": len(active)})
+        # analysis: allow(host-sync): THE step boundary — decoded tokens
+        # must reach the host for scheduling (eos/done/emit decisions)
         toks = np.asarray(toks)
         if tr.enabled:
             tr.complete("decode_step", t_d0, time.perf_counter(),
@@ -663,6 +678,7 @@ class Engine:
                 self.draft_params, self.kv.layers, tok_dev,
                 pages_dev, lens_dev)
             if self.tel.time_device:
+                # analysis: allow(host-sync): opt-in --time-device sync
                 jax.block_until_ready((d_toks, self.kv.layers))
                 t_d1 = time.perf_counter()
                 self._h_dev_draft.observe((t_d1 - t_d0) * 1e3,
@@ -684,6 +700,7 @@ class Engine:
                 self.params, self.kv.layers, tok_dev, d_toks,
                 pages_dev, lens_dev)
             if self.tel.time_device:
+                # analysis: allow(host-sync): opt-in --time-device sync
                 jax.block_until_ready((v_toks, self.kv.layers))
                 t_v1 = time.perf_counter()
                 self._h_dev_verify.observe((t_v1 - t_v0) * 1e3,
@@ -692,6 +709,8 @@ class Engine:
                     tr.complete("device:verify", t_v0, t_v1,
                                 tid=TID_DEVICE, cat="device",
                                 args={"k": k, "n_active": len(active)})
+        # analysis: allow(host-sync): the round boundary — accept/rollback
+        # is host arithmetic over the draft and verify tokens
         d_np, v_np = np.asarray(d_toks), np.asarray(v_toks)
         if tr.enabled:
             tr.complete("verify_step", t_v0, time.perf_counter(),
@@ -776,6 +795,7 @@ class Engine:
                 self.kv.pages_dev()[slot:slot + 1],
                 jnp.asarray([start], jnp.int32))
             if self.tel.time_device:
+                # analysis: allow(host-sync): opt-in --time-device sync
                 jax.block_until_ready((toks, self.kv.layers))
                 t_c1 = time.perf_counter()
                 self._h_dev_prefill.observe((t_c1 - t_c0) * 1e3,
@@ -800,6 +820,8 @@ class Engine:
         self._c_prefills.inc()
         self.sched.note_prefilled(req)      # prompt pages → prefix index
         if not req.out:
+            # analysis: allow(host-sync): first-token read at prefill
+            # completion — seeds the request's decode stream on the host
             first = int(np.asarray(toks)[0, req.plen - 1 - start])
             req.out = [first]
             if req.t_first is None:         # honest TTFT across evictions

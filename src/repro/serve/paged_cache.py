@@ -287,10 +287,17 @@ class PagedKVCache:
     ``layers`` is the jit-carried pytree (donated through decode steps);
     ``ptab``/``lens`` are numpy, written by the scheduler and uploaded as
     small int arrays each step.  Unassigned table entries stay 0 →
-    scratch page."""
+    scratch page.
+
+    ``sanitize=True`` attaches the shadow page ledger (DESIGN.md §12):
+    every allocator transition and every ``set_pages``/``set_len``/
+    ``copy_page`` call is validated against the page state machine and
+    conservation is asserted after each operation.  Host-only overhead;
+    the ``Engine`` enables it from ``REPRO_SANITIZE=1`` / ``--sanitize``.
+    """
 
     def __init__(self, cfg, n_slots: int, n_pages: int, page_size: int,
-                 max_seq_pages: int):
+                 max_seq_pages: int, sanitize: bool = False):
         if not supports_paged_cache(cfg):
             raise ValueError(f"arch {cfg.arch!r} has no paged-cache support")
         self.cfg = cfg
@@ -302,6 +309,10 @@ class PagedKVCache:
         self.alloc = PageAllocator(n_pages)
         self.ptab = np.zeros((n_slots, self.max_seq_pages), np.int32)
         self.lens = np.zeros((n_slots,), np.int32)
+        self.ledger = None
+        if sanitize:
+            from repro.analysis.ledger import attach_ledger
+            attach_ledger(self)          # sets self.ledger
 
     @property
     def max_seq_tokens(self) -> int:

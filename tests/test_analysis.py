@@ -1,0 +1,218 @@
+"""repro.analysis (DESIGN.md §12): the tree is clean under every checker,
+each seeded violation class is caught, suppressions round-trip (honored
+with a reason, rejected without), and the allocator sanitizer validates a
+real engine run while rejecting illegal transitions."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+from repro.analysis.kernelcheck import (check_blocked_lowering,
+                                        check_encoded_maps,
+                                        check_paged_index_maps)
+from repro.analysis.ledger import LedgerError, sanitize_enabled
+from repro.analysis.lint import registered_rules, repo_root, run_lint
+from repro.analysis.selftest import CASES, run_selftest
+from repro.analysis.shardcheck import (check_cache_coverage,
+                                       check_fold_roles,
+                                       check_param_coverage)
+from repro.configs import get_config
+from repro.serve import Engine, PagedKVCache
+from repro.models import init_model
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _tiny_kv(**kw):
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    return PagedKVCache(cfg, n_slots=2, n_pages=8, page_size=8,
+                        max_seq_pages=4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# lint: clean tree, suppression round-trip, rule registry
+# ---------------------------------------------------------------------------
+
+def test_lint_tree_is_clean():
+    assert run_lint(root=repo_root()) == []
+
+
+def test_rule_registry_names_the_documented_rules():
+    ids = set(registered_rules())
+    assert {"host-sync-in-hot-path", "jit-in-loop", "f32-accum",
+            "metric-docs-sync"} <= ids
+
+
+def test_suppression_round_trip():
+    from repro.analysis.selftest import (_lint_annotation_honored,
+                                         _lint_blanket_rejected,
+                                         _lint_hot_sync_caught)
+    assert _lint_hot_sync_caught()       # unannotated sync → finding
+    assert _lint_annotation_honored()    # reasoned allow() → suppressed
+    assert _lint_blanket_rejected()      # reason-less allow() → finding
+
+
+def test_metric_docs_sync_round_trip():
+    from repro.analysis.selftest import _metric_docs_drift
+    assert _metric_docs_drift()
+
+
+# ---------------------------------------------------------------------------
+# kernel bounds: real maps sound, seeded mutations caught
+# ---------------------------------------------------------------------------
+
+def test_real_index_maps_are_sound():
+    for ps, sq in ((8, 1), (16, 5)):
+        assert check_paged_index_maps(ps=ps, Sq=sq) == []
+
+
+def test_off_by_one_index_map_is_caught():
+    import functools
+    import jax.numpy as jnp
+
+    def bad(b, p, pages_s, lens_s, win_s, *, Sq, ps):
+        p_eff = jnp.minimum(p + 1, (lens_s[b] + Sq - 1) // ps)
+        return (pages_s[b, p_eff], 0, 0, 0)
+
+    f = check_paged_index_maps(
+        kv_map=functools.partial(bad, Sq=1, ps=8), ps=8, Sq=1)
+    assert any("wrong page" in x.message for x in f)
+
+
+def test_missing_lens_clamp_is_caught():
+    f = check_paged_index_maps(
+        kv_map=lambda b, p, pages, lens, win: (pages[b, p], 0, 0, 0),
+        ps=8, Sq=1)
+    assert any("past-lens" in x.message for x in f)
+
+
+def test_blocked_lowering_is_in_bounds():
+    assert check_blocked_lowering(ps=8, Sq=1, mode="int8", bk=8) == []
+
+
+def test_encoded_maps_and_seeded_overrun():
+    assert check_encoded_maps(m=33, k=64, n=64) == []
+    bad = check_encoded_maps(x_map=lambda i, j, kk: (i + 1, kk),
+                             m=33, k=64, n=64)
+    assert any("outside the padded extent" in x.message for x in bad)
+
+
+# ---------------------------------------------------------------------------
+# sharding coverage
+# ---------------------------------------------------------------------------
+
+def test_param_and_cache_coverage_clean():
+    assert check_param_coverage("qwen1.5-0.5b") == []
+    assert check_cache_coverage("qwen1.5-0.5b") == []
+    assert check_fold_roles() == []
+
+
+def test_unruled_large_leaf_is_caught():
+    from repro.parallel.sharding import _RULES
+    table = [(p, i) for p, i in _RULES if "embed/table" not in p]
+    f = check_param_coverage("qwen1.5-0.5b", rules=table)
+    assert any("embed/table" in x.message for x in f)
+
+
+# ---------------------------------------------------------------------------
+# allocator sanitizer
+# ---------------------------------------------------------------------------
+
+def test_ledger_double_free_rejected():
+    kv = _tiny_kv(sanitize=True)
+    pages = kv.alloc.alloc(2)
+    kv.alloc.free(pages)
+    with pytest.raises(LedgerError, match="free"):
+        kv.alloc.free(pages)
+
+
+def test_ledger_use_after_free_rejected():
+    kv = _tiny_kv(sanitize=True)
+    pages = kv.alloc.alloc(1)
+    kv.alloc.free(pages)
+    with pytest.raises(LedgerError):
+        kv.set_pages(0, pages)
+
+
+def test_ledger_copy_to_unowned_page_rejected():
+    kv = _tiny_kv(sanitize=True)
+    pages = kv.alloc.alloc(1)
+    with pytest.raises(LedgerError):
+        kv.copy_page(pages[0], pages[0] + 1)
+
+
+def test_ledger_rejection_leaves_shadow_intact():
+    kv = _tiny_kv(sanitize=True)
+    a = kv.alloc.alloc(2)
+    kv.alloc.free(a[:1])
+    with pytest.raises(LedgerError):
+        kv.alloc.free(a)                 # batch contains the freed page
+    kv.alloc.free(a[1:])                 # still-held page frees cleanly
+    kv.ledger.verify()
+
+
+def test_sanitized_engine_run_token_identical(qwen):
+    """A full sanitized serve (prefix cache on, eviction pressure) must
+    assert conservation every step and change no tokens."""
+    cfg, params = qwen
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 13)]
+
+    def serve(sanitize):
+        eng = Engine(params, cfg, n_slots=2, page_size=4, n_pages=16,
+                     prefix_cache=True, prefill_chunk=8,
+                     sanitize=sanitize)
+        outs = []
+        for p in prompts:
+            rid = eng.submit(p, max_new=6)
+            outs.append(eng.run()[rid].tolist())
+        if sanitize:
+            assert eng.kv.ledger is not None
+            assert eng.kv.ledger.checks > 0
+            eng.kv.ledger.verify()
+        else:
+            assert eng.kv.ledger is None
+        return outs
+
+    assert serve(True) == serve(False)
+
+
+def test_sanitize_env_default(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    assert sanitize_enabled()
+    kv = _tiny_kv()                      # explicit opt-in only: stays off
+    assert kv.ledger is None
+    monkeypatch.setenv("REPRO_SANITIZE", "0")
+    assert not sanitize_enabled()
+
+
+# ---------------------------------------------------------------------------
+# self-test harness + CLI
+# ---------------------------------------------------------------------------
+
+def test_selftest_has_no_escapes():
+    results = run_selftest()
+    assert len(results) == len(CASES)
+    escapes = [r for r in results if not r["caught"]]
+    assert escapes == []
+
+
+def test_analyze_cli_lint_exits_clean(tmp_path):
+    out = tmp_path / "report.json"
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    r = subprocess.run(
+        [sys.executable,
+         os.path.join(repo_root(), "scripts", "analyze.py"),
+         "--lint", "--json", str(out)],
+        capture_output=True, text=True, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert out.exists()
