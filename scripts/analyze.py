@@ -1,15 +1,20 @@
-"""Static-analysis runner: lint + kernel bounds + sharding coverage.
+"""Static-analysis runner: lint + kernel bounds + sharding coverage +
+compiled-artifact audit.
 
 One entry point for everything under ``src/repro/analysis`` (DESIGN.md
-§12).  Findings print one per line as ``file:line: [rule] message`` and
-(with ``--json``) land in a structured report; any finding exits 1, so
-the CI ``static-analysis`` job is a plain invocation.
+§12–§13).  Findings print one per line as ``file:line: [rule] message``
+and (with ``--json``) land in a structured report; any finding exits 1,
+so the CI ``static-analysis`` job is a plain invocation.
 
     python scripts/analyze.py --lint --kernels --sharding
     python scripts/analyze.py --self-test        # seeded-mutation escapes
+    python scripts/analyze.py --compiled         # lower + audit every cell
     python scripts/analyze.py --json ANALYSIS_report.json
 
-With no selection flags, all three checkers run.
+With no selection flags, the three source-level checkers run; the
+compiled audit (which lowers every serving executable for every paged
+arch × kv dtype × mesh) is opt-in via ``--compiled`` and writes its own
+``ANALYSIS_compiled.json`` (path via ``--compiled-json``).
 """
 from __future__ import annotations
 
@@ -20,6 +25,13 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
+
+# the compiled audit's model=2 cells need >=2 devices; XLA only reads
+# this at backend init, so append it before anything imports jax
+_FLAG = "--xla_force_host_platform_device_count=2"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
 
 
 def main() -> int:
@@ -33,6 +45,14 @@ def main() -> int:
     ap.add_argument("--self-test", action="store_true",
                     help="seeded-mutation escape check (each planted bug "
                          "must be caught)")
+    ap.add_argument("--compiled", action="store_true",
+                    help="compiled-artifact audit: lower every serving "
+                         "executable per arch × kv dtype × mesh and check "
+                         "donation/collectives/captures/recompiles")
+    ap.add_argument("--compiled-json", metavar="PATH",
+                    default=os.path.join(REPO, "ANALYSIS_compiled.json"),
+                    help="where --compiled writes its cell report "
+                         "(default: ANALYSIS_compiled.json)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the structured report here")
     ap.add_argument("--rules", action="store_true",
@@ -49,7 +69,7 @@ def main() -> int:
         return 0
 
     run_all = not (args.lint or args.kernels or args.sharding
-                   or args.self_test)
+                   or args.self_test or args.compiled)
     report = {"findings": [], "coverage": {}, "selftest": []}
     findings = []
 
@@ -68,6 +88,18 @@ def main() -> int:
         f, cov = run_shardcheck()
         findings.extend(f)
         report["coverage"]["sharding"] = cov
+
+    if args.compiled:
+        from repro.analysis.compiled import run_compiled
+        f, rep = run_compiled()
+        findings.extend(f)
+        report["coverage"]["compiled"] = {
+            "findings": len(f), "cells": len(rep["cells"]),
+            "skipped": rep["skipped"]}
+        with open(args.compiled_json, "w", encoding="utf-8") as fp:
+            json.dump(rep, fp, indent=2, sort_keys=True)
+        print(f"compiled report -> {args.compiled_json} "
+              f"({len(rep['cells'])} cells)")
 
     escapes = []
     if args.self_test:

@@ -76,7 +76,7 @@ def check_design_refs(errors: list) -> None:
 
 RULE_REG_RE = re.compile(r"^@rule\(\s*['\"]([a-z0-9-]+)['\"]",
                          re.MULTILINE)
-RULE_CONST_RE = re.compile(r"^RULE(?:_ID)?\s*=\s*['\"]([a-z0-9-]+)['\"]",
+RULE_CONST_RE = re.compile(r"^RULE(?:_[A-Z_]+)?\s*=\s*['\"]([a-z0-9-]+)['\"]",
                            re.MULTILINE)
 CATALOG_ID_RE = re.compile(r"`([a-z][a-z0-9-]+)`")
 

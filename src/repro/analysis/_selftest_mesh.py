@@ -1,0 +1,40 @@
+"""Subprocess body for the ``compiled/fold-role-flip-gather`` self-test
+case (DESIGN.md §13).
+
+The tier-1 suite runs the self-test CASES in-process on one device, but
+planting a stray collective needs a real 2-device mesh — XLA_FLAGS must
+be set before jax imports, so this runs as ``python -m
+repro.analysis._selftest_mesh`` and prints CAUGHT / ESCAPED / SKIP.
+
+The mutation: re-point the row-parallel ``w(o|out)_fw`` bitplane rule at
+the column-parallel placement.  The encoded kernel still contracts over
+the (now mis-sharded) k dim, so GSPMD has to move fw-plane bytes —
+the compiled-collectives audit must flag the deviation from the pinned
+per-step profile.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=2"
+                           ).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main() -> None:
+    from repro.analysis.compiled import (RULE_COLLECTIVES, _make_mesh,
+                                         audit_encoded_cell)
+    from repro.parallel.sharding import _RULES
+
+    table = [(p, (None, "fsdp", "model")) if p == r"w(o|out)_fw$"
+             else (p, i) for p, i in _RULES]
+    mesh = _make_mesh("model2")
+    if mesh == "skip":
+        print("SKIP")
+        return
+    f, cell, _ = audit_encoded_cell(mesh, "model2", rules=table)
+    print("CAUGHT" if any(x.rule == RULE_COLLECTIVES for x in f)
+          else "ESCAPED")
+
+
+if __name__ == "__main__":
+    main()

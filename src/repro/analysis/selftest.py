@@ -5,8 +5,11 @@ A static analyzer that silently stops finding anything is worse than no
 analyzer.  Each case here plants one representative defect — an
 off-by-one index map, a missing lens clamp, a deleted sharding rule, a
 mistabled fold role, a double-free, a use-after-free, an unannotated
-host sync, a blanket suppression, an undocumented metric — and asserts
-the corresponding checker reports it.  A mutation that goes undetected
+host sync, a blanket suppression, an undocumented metric, a dropped
+``donate_argnums``, a weight baked into an executable as a constant, a
+fold-role flip that plants a stray collective, a leaked decode shape
+that forces a retrace — and asserts the corresponding checker reports
+it.  A mutation that goes undetected
 is an **escape**; ``scripts/analyze.py --self-test`` (and the CI
 ``static-analysis`` job) fails on any escape.
 
@@ -199,6 +202,54 @@ def _metric_docs_drift() -> bool:
             and any("stale_metric" in x.message for x in f))
 
 
+def _compiled_dropped_donation() -> bool:
+    from repro.analysis.compiled import (RULE_DONATION, _executables,
+                                         audit_cell)
+    from repro.configs.registry import get_config
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    exes = {"paged_decode": _executables(cfg, full=False)["paged_decode"]}
+    # lower the decode step with donation stripped: the cache pools must
+    # show up as un-aliased params in the compiled module
+    f, _ = audit_cell("qwen1.5-0.5b", cfg, "bf16", None, "single",
+                      exes=exes, donate_override=())
+    return any(x.rule == RULE_DONATION for x in f)
+
+
+def _compiled_captured_constant() -> bool:
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.compiled import RULE_CAPTURE, check_capture
+    w = jnp.zeros((512, 1024), jnp.float32)     # 2 MB closed-over weight
+
+    def step(x):
+        return x @ w
+
+    f = check_capture(
+        step, (jax.ShapeDtypeStruct((1, 512), jnp.float32),), "selftest")
+    return any(x.rule == RULE_CAPTURE for x in f)
+
+
+def _compiled_fold_flip_gather() -> bool:
+    # needs a 2-device mesh, which means XLA_FLAGS before jax import —
+    # run the mutation in a subprocess (SKIP counts as caught: the same
+    # audit is exercised wherever a multi-device jax is available)
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.analysis._selftest_mesh"],
+        capture_output=True, text=True, env=env, timeout=1200)
+    verdict = (p.stdout.strip().splitlines() or [""])[-1]
+    return verdict in ("CAUGHT", "SKIP")
+
+
+def _compiled_shape_leak() -> bool:
+    from repro.analysis.compiled import RULE_RECOMPILE, check_recompile
+    f, _ = check_recompile(inject_decode_shapes=((3, 1),))
+    return any(x.rule == RULE_RECOMPILE for x in f)
+
+
 CASES: List[Case] = [
     ("kernel/off-by-one-index-map", _kernel_off_by_one),
     ("kernel/missing-lens-clamp", _kernel_missing_clamp),
@@ -212,6 +263,10 @@ CASES: List[Case] = [
     ("lint/annotation-honored", _lint_annotation_honored),
     ("lint/blanket-suppression-rejected", _lint_blanket_rejected),
     ("lint/metric-docs-drift", _metric_docs_drift),
+    ("compiled/dropped-donation", _compiled_dropped_donation),
+    ("compiled/captured-weight-constant", _compiled_captured_constant),
+    ("compiled/fold-role-flip-gather", _compiled_fold_flip_gather),
+    ("compiled/shape-leak-retrace", _compiled_shape_leak),
 ]
 
 

@@ -1,95 +1,8 @@
-"""Parse compiled (post-SPMD) HLO text for per-device collective bytes.
-
-cost_analysis() has no collective traffic — we sum tensor sizes of every
-all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
-instruction, with ring-algorithm wire factors from the replica-group size:
-
-  all-gather        (n−1)/n · out_bytes
-  all-reduce        2(n−1)/n · bytes
-  reduce-scatter    (n−1) · out_bytes        (input = n·out streams through)
-  all-to-all        (n−1)/n · bytes
-  collective-permute  bytes
-
-Shapes in compiled HLO are already per-device (partitioned), so sums are
-per-device wire bytes.
-"""
-from __future__ import annotations
-
-import re
-from collections import defaultdict
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
-_COLL_RE = re.compile(
-    r"=\s*(?:\(([^)]*)\)|(\w+\[[0-9,]*\][^ ]*))\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\(")
-_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    total = 0
-    for m in _SHAPE_RE.finditer(shape_str):
-        dt, dims = m.group(1), m.group(2)
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def collective_bytes(hlo_text: str) -> dict:
-    """→ {op_name: wire_bytes_per_device}, plus '_total'."""
-    out: dict = defaultdict(float)
-    for line in hlo_text.splitlines():
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        shape_str = m.group(1) or m.group(2)
-        op = m.group(3)
-        if "-done(" in line:        # started op already counted at -start
-            continue
-        size = _shape_bytes(shape_str)
-        n = 1
-        g = _GROUPS_RE.search(line)
-        if g:
-            n = len(g.group(1).split(","))
-        else:
-            gi = _GROUPS_IOTA_RE.search(line)
-            if gi:
-                n = int(gi.group(2))
-        n = max(n, 2)
-        if op == "all-gather":
-            wire = size * (n - 1) / n
-        elif op == "all-reduce":
-            wire = 2.0 * size * (n - 1) / n
-        elif op == "reduce-scatter":
-            wire = size * (n - 1)
-        elif op == "all-to-all":
-            wire = size * (n - 1) / n
-        else:                        # collective-permute
-            wire = float(size)
-        out[op] += wire
-    out["_total"] = sum(v for k, v in out.items() if not k.startswith("_"))
-    return dict(out)
-
-
-def count_ops(hlo_text: str, names=("fusion", "all-gather", "all-reduce",
-                                    "reduce-scatter", "all-to-all",
-                                    "collective-permute", "while", "dot",
-                                    "custom-call")) -> dict:
-    counts = {}
-    for n in names:
-        counts[n] = len(re.findall(rf"\b{n}\(", hlo_text)) + \
-            len(re.findall(rf"\b{n}-start\(", hlo_text))
-    return counts
+"""Compatibility shim: the HLO text parser moved to the shared layer at
+``repro.analysis.hlo`` so the dryrun cost report and the compiled-
+executable audit (DESIGN.md §13) read one grammar.  Import from there."""
+from repro.analysis.hlo import (  # noqa: F401
+    _DTYPE_BYTES, _SHAPE_RE, _shape_bytes, collective_bytes,
+    collective_instrs, constants, count_ops, entry_param_shapes,
+    input_output_aliases,
+)

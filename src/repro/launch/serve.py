@@ -280,6 +280,7 @@ def main():
               f"paged-attn={args.paged_attn}, continuous)")
         print(f"  occupancy={st['occupancy']:.2f} "
               f"evictions={st['evictions']} "
+              f"jit_compiles={st['jit_compiles']} "
               f"p50={st['latency_p50_s']:.3f}s p99={st['latency_p99_s']:.3f}s "
               f"kv_pool={st['kv_pool_bytes'] / 1e6:.1f}MB")
         print(f"  kv: dtype={st['kv_cache_dtype']} "

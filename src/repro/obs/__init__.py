@@ -10,5 +10,6 @@ from .stats import percentile, percentiles
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       DEFAULT_BUCKETS)
 from .trace import Tracer, NULL_SPAN
+from .jitcount import CompileTracker
 from .drift import DriftMonitor, logit_agreement
 from .profile import profiler_trace

@@ -1,0 +1,64 @@
+"""XLA-compilation tracker: count actual compiles per named jitted step.
+
+A jitted function retraces (and recompiles) whenever an argument
+signature it has not seen arrives — a silently leaked shape in the
+serving loop turns the one-compile decode step into a compile-per-step
+crawl that no unit test notices.  ``CompileTracker`` snapshots each
+tracked function's jit-cache size at attach time and reports the delta,
+so an engine can export exactly how many compilations *it* caused
+(shared, already-warm jitted steps start from their current size).
+
+The engine feeds the deltas into the ``jit_compiles`` labeled counter
+(``fn=prefill|decode|draft|verify|copy_page``) and the compiled-
+executable audit (DESIGN.md §13) asserts exact per-trace counts.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+
+def _cache_size(fn) -> int:
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return 0
+
+
+class CompileTracker:
+    """Per-name compile deltas over jitted functions.
+
+    ``track(name, fn)`` registers ``fn`` (anything exposing jax's
+    ``_cache_size``; others are ignored) and returns it unchanged so the
+    call can wrap an assignment.  ``counts()`` maps name → compiles since
+    attach; ``publish(counter)`` increments a labeled obs counter by the
+    delta since the last publish (idempotent between compiles)."""
+
+    def __init__(self) -> None:
+        self._fns: Dict[str, object] = {}
+        self._base: Dict[str, int] = {}
+        self._published: Dict[str, int] = {}
+
+    def track(self, name: str, fn):
+        if fn is not None and hasattr(fn, "_cache_size"):
+            self._fns[name] = fn
+            self._base[name] = _cache_size(fn)
+            self._published.setdefault(name, 0)
+        return fn
+
+    def counts(self) -> Dict[str, int]:
+        return {n: _cache_size(f) - self._base[n]
+                for n, f in self._fns.items()}
+
+    def total(self) -> int:
+        return sum(self.counts().values())
+
+    def publish(self, counter) -> int:
+        """Sync a ``repro.obs`` Counter (labeled ``fn=``) to the current
+        counts; returns the total."""
+        c = self.counts()
+        for name, v in c.items():
+            d = v - self._published.get(name, 0)
+            if d > 0:
+                counter.inc(d, fn=name)
+                self._published[name] = v
+        return sum(c.values())

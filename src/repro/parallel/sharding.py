@@ -203,19 +203,20 @@ _RULES: list[tuple[str, tuple]] = [
 ]
 
 
-def rule_for_path(path: str):
+def rule_for_path(path: str, rules=None):
     """First matching ``(pattern, items)`` rule for ``path``, or ``None``
     when NO rule matches.  ``items is None`` means an explicit replicate
     rule — distinct from no rule at all, which also replicates but is the
-    silent default ``analysis/shardcheck.py`` flags for large leaves."""
-    for pat, items in _RULES:
+    silent default ``analysis/shardcheck.py`` flags for large leaves.
+    ``rules`` overrides ``_RULES`` (analysis seams only)."""
+    for pat, items in (_RULES if rules is None else rules):
         if re.search(pat, path):
             return pat, items
     return None
 
 
-def _spec_for_path(path: str, shape: tuple, fsdp: bool) -> P:
-    rule = rule_for_path(path)
+def _spec_for_path(path: str, shape: tuple, fsdp: bool, rules=None) -> P:
+    rule = rule_for_path(path, rules)
     if rule is None or rule[1] is None:
         return P()  # explicit replicate rule, or no-match default
     items = rule[1]
@@ -250,12 +251,14 @@ STACKED_STAGES = ("stack", "moe_stack", "dense_prefix", "xlstm", "enc",
                   "dec")
 
 
-def param_specs(params, mesh: Mesh, fsdp: bool = False):
+def param_specs(params, mesh: Mesh, fsdp: bool = False, rules=None):
     """PartitionSpec pytree (NamedShardings) mirroring ``params``.
 
     Dims whose size does not divide the assigned mesh axes fall back to
     replication on that dim (divisibility-safe by construction — configs pad
     vocab/heads, but e.g. tiny smoke models stay runnable on any mesh).
+    ``rules`` overrides the ``_RULES`` table — the compiled-audit self-test
+    (DESIGN.md §13) shards under a doctored table to plant stray gathers.
     """
     axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
 
@@ -278,7 +281,7 @@ def param_specs(params, mesh: Mesh, fsdp: bool = False):
         pstr = _path_str(path)
         stacked = pstr.split("/", 1)[0] in STACKED_STAGES
         shape = leaf.shape[1:] if stacked and leaf.ndim >= 1 else leaf.shape
-        spec = _spec_for_path(pstr, shape, fsdp)
+        spec = _spec_for_path(pstr, shape, fsdp, rules)
         items = list(spec)[:len(shape)] + [None] * (len(shape) - len(spec))
         if stacked:
             items = [None] + items          # layer-stack dim replicated

@@ -41,10 +41,10 @@ from repro.analysis.ledger import sanitize_enabled
 from repro.core.macexec import check_drafter
 from repro.models import (apply_model, init_cache, init_paged_cache,
                           supports_paged_cache)
-from repro.obs import percentile, profiler_trace
+from repro.obs import CompileTracker, percentile, profiler_trace
 from repro.parallel.sharding import param_specs, set_mesh
 from repro.parallel.statesharding import cache_specs
-from .paged_cache import PagedKVCache, pages_for
+from .paged_cache import PagedKVCache, _copy_page_jit, pages_for
 from .scheduler import (Scheduler, Request, QUEUED, PREFILLING, DECODING,
                         FINISHED)
 from .spec import greedy_accept, make_spec_draft, make_spec_verify
@@ -125,7 +125,10 @@ def generate(params, cfg, prompts: jnp.ndarray, max_new: int = 16,
                 "exactly; batch equal-length prompts instead")
         else:
             cache["pad"] = pad_lens
-    prefill = jax.jit(make_prefill(cfg))
+    # the cache is freshly built above and rebound to the return value, so
+    # prefill donates it like the decode step does — without the donation
+    # XLA keeps both copies live across the call (compiled-donation audit)
+    prefill = jax.jit(make_prefill(cfg), donate_argnums=(1,))
     step = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
     logits, cache = prefill(params, cache, prompts, **(extras or {}))
     out = []
@@ -328,6 +331,17 @@ class Engine:
                                      if mesh is not None else draft_params)
             self._draft, self._verify = _jitted_spec_steps(
                 self.draft_cfg, cfg, self.spec_k, mesh)
+        # compile accounting (DESIGN.md §13): deltas over the jitted
+        # steps' cache sizes since THIS engine attached — shared warm
+        # steps start at zero, so the counts are compiles this engine
+        # caused (a leaked shape retracing decode shows up immediately)
+        self.jit_tracker = CompileTracker()
+        self.jit_tracker.track("prefill", self._prefill)
+        self.jit_tracker.track("decode", self._step)
+        if self.spec_k:
+            self.jit_tracker.track("draft", self._draft)
+            self.jit_tracker.track("verify", self._verify)
+        self.jit_tracker.track("copy_page", _copy_page_jit)
         self.requests = {}
         self._next_rid = 0
         self.clock = 0                     # logical steps
@@ -353,6 +367,11 @@ class Engine:
             "stalls", "decode steps a request sat page-starved")
         self._c_rejects = reg.counter("rejects",
                                       "requests rejected at submit")
+        self._c_jit = reg.counter(
+            "jit_compiles",
+            "XLA compilations of the jitted serving steps since this "
+            "engine attached (labeled fn=prefill|decode|draft|verify|"
+            "copy_page)")
         self._h_step = reg.histogram("step_ms", "engine step wall ms",
                                      buckets=(1, 2, 5, 10, 25, 50, 100,
                                               250, 500, 1000))
@@ -886,6 +905,7 @@ class Engine:
         pfx = self.sched.prefix
         on = pfx is not None        # NOT truthiness — an empty index is falsy
         al = self.kv.alloc
+        jit_total = self.jit_tracker.publish(self._c_jit)
         m = dict(self.metrics)
         m.update({
             "finished": len(fin),
@@ -921,6 +941,7 @@ class Engine:
             "n_pages": self.kv.n_pages,
             "n_slots": self.kv.n_slots,
             "mac_mode": self.cfg.mac.mode,
+            "jit_compiles": jit_total,
             "mesh": (dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
                      if self.mesh is not None else None),
         })
@@ -973,8 +994,6 @@ class ServeEngine:
         if mesh is not None:
             self.params = _shard_params(params, mesh)
         self.max_len = max_len
-        self.step = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
-        self.prefill = jax.jit(make_prefill(cfg))
         self.batch_slots = batch_slots
 
     def run(self, requests: List[np.ndarray], max_new: int = 32,

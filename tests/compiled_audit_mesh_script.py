@@ -1,0 +1,49 @@
+"""Compiled-artifact audit on a 2-fake-device model mesh (DESIGN.md §13).
+
+Run as a subprocess (XLA_FLAGS must precede the jax import):
+
+  * the primary arch's full executable set lowers under SPMD with zero
+    findings — donation aliasing survives partitioning, collective
+    counts equal the pinned per-step profile, no pool/fw-sized gather;
+  * the observed paged-decode profile is byte-for-byte the pinned one
+    (so the pin itself can't rot into something vacuously true);
+  * stripping donation on the mesh cell is still caught.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from repro.analysis.compiled import (EXPECTED_COLLECTIVES, RULE_DONATION,
+                                     _executables, _make_mesh, audit_cell)
+from repro.configs import get_config
+
+
+def main() -> None:
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    mesh = _make_mesh("model2")
+    assert mesh != "skip", "XLA_FLAGS did not yield 2 devices"
+
+    f, cell = audit_cell("qwen1.5-0.5b", cfg, "bf16", mesh, "model2",
+                         full=True)
+    assert f == [], [str(x) for x in f]
+    exes = cell["executables"]
+    assert "dense_prefill" not in exes          # single-only skipped
+    for name in ("paged_prefill", "paged_decode", "spec_draft",
+                 "spec_verify", "copy_page"):
+        got = exes[name]["collectives"]["counts"]
+        assert got == EXPECTED_COLLECTIVES[(name, "dense")], (name, got)
+        assert exes[name]["aliases"] >= exes[name]["donated_leaves"] > 0 \
+            or name == "copy_page", (name, exes[name])
+
+    # dropped donation is caught under SPMD too
+    one = {"paged_decode": _executables(cfg, full=False)["paged_decode"]}
+    f, _ = audit_cell("qwen1.5-0.5b", cfg, "bf16", mesh, "model2",
+                      exes=one, donate_override=())
+    assert any(x.rule == RULE_DONATION for x in f), [str(x) for x in f]
+
+    print("ALL_COMPILED_AUDIT_MESH_OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -216,3 +216,131 @@ def test_analyze_cli_lint_exits_clean(tmp_path):
         capture_output=True, text=True, env=env)
     assert r.returncode == 0, r.stdout + r.stderr
     assert out.exists()
+
+
+# ---------------------------------------------------------------------------
+# compiled-artifact audit (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_hlo_parser_on_real_compiled_module():
+    """The shared HLO-text parser reads aliasing, entry params, and
+    large literal constants out of a module XLA actually compiled."""
+    import jax.numpy as jnp
+    from repro.analysis import hlo as H
+
+    f = jax.jit(lambda a, b: (a + b, b * 2.0), donate_argnums=(0,))
+    a = jnp.zeros((4, 8), jnp.float32)
+    text = f.lower(a, a).compile().as_text()
+    aliases = H.input_output_aliases(text)
+    assert len(aliases) == 1 and aliases[0]["param"] == 0
+    pshapes = H.entry_param_shapes(text)
+    assert len(pshapes) == 2 and pshapes[0] == "f32[4,8]"
+    assert H.count_ops(text).get("all-reduce", 0) == 0
+    assert H.collective_instrs(text) == []
+
+    w = jnp.arange(64 * 64, dtype=jnp.float32).reshape(64, 64)
+    g = jax.jit(lambda x: x @ w)
+    text = g.lower(jnp.zeros((1, 64), jnp.float32)).compile().as_text()
+    consts = H.constants(text, min_bytes=4096)
+    assert any(b >= 64 * 64 * 4 for _, b in consts), text[:2000]
+
+
+def test_hloparse_shim_reexports_shared_parser():
+    from repro.analysis import hlo as H
+    from repro.launch import hloparse
+    assert hloparse.collective_bytes is H.collective_bytes
+    assert hloparse.count_ops is H.count_ops
+    assert hloparse.input_output_aliases is H.input_output_aliases
+
+
+def test_compiled_audit_single_cell_clean_and_reported():
+    """Every executable of the primary arch lowers clean on one device:
+    donation aliased with exact shapes, zero collectives, no captures;
+    the per-exe report carries alias/memory numbers."""
+    from repro.analysis.compiled import _executables, audit_cell
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    f, cell = audit_cell("qwen1.5-0.5b", cfg, "bf16", None, "single",
+                         exes=_executables(cfg, full=False))
+    assert f == [], [str(x) for x in f]
+    for name, rec in cell["executables"].items():
+        assert rec["collectives"]["counts"] == {}, name
+        assert rec["aliases"] >= rec["donated_leaves"] > 0, (name, rec)
+        assert rec["memory"]["argument_size_in_bytes"] > 0, name
+
+
+def test_compiled_audit_catches_dropped_donation_and_capture():
+    from repro.analysis.selftest import (_compiled_captured_constant,
+                                         _compiled_dropped_donation)
+    assert _compiled_dropped_donation()
+    assert _compiled_captured_constant()
+
+
+def test_donation_site_sweep_flags_unwaivered_jit():
+    from repro.analysis.compiled import (RULE_DONATION,
+                                         check_donation_sites)
+    assert check_donation_sites() == []          # the real tree is clean
+    bad = {"src/repro/serve/engine.py":
+           "import jax\nstep = jax.jit(lambda c: c)\n"}
+    f = check_donation_sites(sources=bad)
+    assert any(x.rule == RULE_DONATION for x in f)
+
+
+def test_recompile_counts_are_exact():
+    """Both smoke traces (plain + speculative) land on the pinned
+    compile counts, include an eviction, and the report says so."""
+    from repro.analysis.compiled import EXPECTED_COMPILES, check_recompile
+    f, rep = check_recompile()
+    assert f == [], [str(x) for x in f]
+    for mode in ("plain", "spec"):
+        for name, n in EXPECTED_COMPILES[mode].items():
+            assert rep[mode]["compiles"][name] == n, (mode, rep)
+        assert rep[mode]["trace"]["evictions"] >= 1, (mode, rep)
+        assert rep[mode]["compiles"]["copy_page"] <= 1, (mode, rep)
+
+
+def test_compiled_report_schema_serializable():
+    import json as _json
+    from repro.analysis.compiled import run_compiled
+    f, rep = run_compiled(archs=["qwen1.5-0.5b"], dtypes=("bf16",),
+                          meshes=("single",), encoded=False,
+                          recompile=False)
+    assert f == [], [str(x) for x in f]
+    assert set(rep) == {"cells", "recompile", "skipped", "donation_sites"}
+    cell = rep["cells"]["qwen1.5-0.5b/bf16/single"]
+    assert cell["arch"] == "qwen1.5-0.5b" and cell["mac"] == "dense"
+    assert set(cell["executables"])  # non-empty
+    _json.dumps(rep)                 # the whole report is JSON-clean
+
+
+def test_engine_stats_exports_jit_compiles(qwen):
+    """The CompileTracker feeds the labeled ``jit_compiles`` counter: a
+    cold engine serving one request compiles prefill + decode, exactly."""
+    import dataclasses
+    cfg, _ = qwen
+    cfg2 = dataclasses.replace(cfg, rope_theta=cfg.rope_theta + 0.125)
+    params = init_model(jax.random.PRNGKey(0), cfg2)
+    eng = Engine(params, cfg2, n_slots=2, page_size=8, n_pages=16,
+                 prefill_chunk=8)
+    eng.submit(np.arange(1, 9, dtype=np.int32), max_new=4)
+    eng.run()
+    assert eng.stats()["jit_compiles"] == 2
+    assert eng.jit_tracker.counts() == \
+        {"prefill": 1, "decode": 1, "copy_page": 0}
+    eng.submit(np.arange(1, 9, dtype=np.int32), max_new=4)
+    eng.run()                                    # warm: no new compiles
+    assert eng.stats()["jit_compiles"] == 2
+
+
+def test_compiled_audit_mesh():
+    """model=2 cell: donation survives SPMD, collective counts match
+    the pinned profile (2 fake devices, subprocess so XLA_FLAGS doesn't
+    leak)."""
+    script = os.path.join(os.path.dirname(__file__),
+                          "compiled_audit_mesh_script.py")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, script], capture_output=True,
+                       text=True, timeout=1200, env=env)
+    assert r.returncode == 0, \
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "ALL_COMPILED_AUDIT_MESH_OK" in r.stdout
